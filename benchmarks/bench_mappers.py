@@ -1,0 +1,29 @@
+"""Paper Table 2 / Fig 5: execution time and speedup vs number of mappers on
+the T10I4D100K twin. Saturation emerges mechanically from the fixed
+per-mapper apriori-gen + structure-build cost."""
+
+from __future__ import annotations
+
+from repro.core import run_mapreduce_apriori
+from repro.data import paper_datasets
+
+from benchmarks.common import SCALE, row
+
+MAPPERS = [1, 2, 5, 10, 20]
+
+
+def run() -> list:
+    db = paper_datasets(scale=SCALE)["T10I4D100K"]
+    out = []
+    for structure in ["hash_tree", "trie", "hash_table_trie"]:
+        base = None
+        for m in MAPPERS:
+            res = run_mapreduce_apriori(db, 0.02, structure=structure,
+                                        n_mappers=m, max_k=8)
+            t = res.parallel_seconds
+            base = base or t
+            out.append(row(
+                f"table2/{structure}/mappers={m}", t * 1e6,
+                f"speedup={base / t:.2f}",
+            ))
+    return out

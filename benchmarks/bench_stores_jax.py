@@ -1,0 +1,66 @@
+"""Beyond-paper: the four TPU array-layout stores on one counting wave, plus
+the Pallas support-count kernel (interpret mode on CPU: validated, and timed
+via its pure-jnp oracle, which is the identical arithmetic the MXU executes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import MapReduceEngine
+from repro.core.itemsets import apriori_gen, level_to_matrix, sort_level
+from repro.core.stores import encode_db
+from repro.data import paper_datasets
+
+from benchmarks.common import SCALE, row, timed
+
+
+def run() -> list:
+    db = paper_datasets(scale=SCALE)["T10I4D100K"]
+    items = sorted({i for t in db for i in t})
+    remap = {it: i for i, it in enumerate(items)}
+    db_dense = [[remap[i] for i in t] for t in db]
+    enc = encode_db(db_dense, n_items=len(items))
+
+    # one realistic candidate wave: frequent pairs from frequent items
+    from collections import Counter
+
+    c1 = Counter(i for t in db_dense for i in t)
+    min_count = max(2, int(0.02 * len(db)))
+    l1 = sort_level((i,) for i, c in c1.items() if c >= min_count)
+    c2 = apriori_gen(l1)
+    mat = level_to_matrix(c2)
+
+    out = []
+    counts_ref = None
+    for store in ["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap"]:
+        engine = MapReduceEngine(store=store)
+        engine.place(enc)
+        engine.count_candidates(mat)  # compile
+        counts, sec = timed(engine.count_candidates, mat, repeat=2)
+        if counts_ref is None:
+            counts_ref = counts
+        np.testing.assert_array_equal(counts, counts_ref)
+        out.append(row(
+            f"stores_jax/{store}/count_c2", sec * 1e6,
+            f"C={mat.shape[0]};N={enc.n_transactions}",
+        ))
+
+    # Pallas kernel (interpret mode) on a trimmed slice: correctness + timing
+    from repro.core.stores.bitmap import candidates_to_khot
+    from repro.kernels.support_count import support_count, support_count_ref
+
+    n_small, c_small = 2048, 512
+    bm = enc.bitmap[:n_small].astype(np.float32)
+    khot, kvec = candidates_to_khot(mat[:c_small], enc.f_pad)
+    ref, ref_s = timed(
+        lambda: jax.block_until_ready(
+            support_count_ref(jnp.array(bm), jnp.array(khot), jnp.array(kvec))),
+        repeat=3)
+    got = support_count(bm, khot, kvec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    out.append(row("kernel/support_count_ref(jnp)", ref_s * 1e6,
+                   f"N={n_small};C={c_small};interpret_validated=yes"))
+    return out

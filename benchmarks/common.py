@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+SCALE = float(os.environ.get("BENCH_SCALE", "0.05"))
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kwargs):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

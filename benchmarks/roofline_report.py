@@ -1,0 +1,104 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      [--in benchmarks/results/dryrun.jsonl] [--multi-pod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+PEAK = {"compute": 197e12, "memory": 819e9, "collective": 50e9}
+
+
+def load(path: str):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(recs, multi_pod: bool) -> str:
+    rows = [r for r in recs if r.get("multi_pod") == multi_pod]
+    out = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MFU-bound | useful/HLO | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped: {r['reason']} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — | — |")
+            continue
+        # MFU bound: useful model flops / (chips * peak * step_time_bound)
+        step = r["step_time_bound_s"]
+        mfu = (r["model_flops_total"]
+               / (r["n_chips"] * PEAK["compute"] * step)) if step else 0.0
+        peak_mem = r["memory"]["peak_device_bytes"] / 1e9
+        frac = r.get("useful_flops_fraction")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {mfu * 100:.1f}% | "
+            f"{frac:.2f} | {peak_mem:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def summary(recs) -> str:
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] not in ("ok", "skipped")]
+    by_bottleneck = defaultdict(int)
+    for r in ok:
+        by_bottleneck[r["bottleneck"]] += 1
+    lines = [
+        f"cells: {len(ok)} compiled ok, {len(sk)} skipped (documented), "
+        f"{len(er)} errors",
+        f"bottlenecks: {dict(by_bottleneck)}",
+    ]
+    if ok:
+        worst = min(
+            (r for r in ok if r["shape"] == "train_4k"),
+            key=lambda r: r["model_flops_total"]
+            / (r["n_chips"] * PEAK["compute"] * max(r["step_time_bound_s"], 1e-12)),
+            default=None,
+        )
+        if worst:
+            lines.append(f"worst train-MFU cell: {worst['arch']}/{worst['shape']}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="benchmarks/results/dryrun.jsonl")
+    args = ap.parse_args()
+    recs = load(args.inp)
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(table(recs, False))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(recs, True))
+    print("\n## Summary\n")
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  BENCH_SCALE=0.02 python -m benchmarks.run fig      # subset by name
+
+Prints ``name,us_per_call,derived`` CSV. Roofline numbers live in
+benchmarks/results/dryrun.jsonl (see repro.launch.dryrun) and are rendered by
+benchmarks/roofline_report.py.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_iterations,
+        bench_mappers,
+        bench_min_support,
+        bench_stores_jax,
+        bench_strategies,
+    )
+
+    suites = {
+        "fig2-4_min_support": bench_min_support.run,
+        "table1_iterations": bench_iterations.run,
+        "table2_fig5_mappers": bench_mappers.run,
+        "stores_jax": bench_stores_jax.run,
+        "strategies": bench_strategies.run,
+    }
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if pattern and pattern not in name:
+            continue
+        t0 = time.time()
+        for line in fn():
+            print(line, flush=True)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

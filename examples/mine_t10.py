@@ -1,0 +1,49 @@
+"""End-to-end driver (the paper's kind): mine the full T10I4D100K-scale
+synthetic dataset with checkpoint/restart fault tolerance.
+
+  PYTHONPATH=src python examples/mine_t10.py [--scale 1.0] [--min-support 0.02]
+
+With --scale 1.0 this is the paper's full workload: 100k transactions, the
+complete level-wise run. The miner checkpoints after every level job; kill it
+mid-run and re-run to watch it resume at the last completed level.
+"""
+
+import argparse
+import time
+
+from repro.core import FrequentItemsetMiner
+from repro.data import quest_generator
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--min-support", type=float, default=0.02)
+    ap.add_argument("--store", default="bitmap",
+                    choices=["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_mine_t10")
+    args = ap.parse_args()
+
+    n = int(100_000 * args.scale)
+    print(f"generating T10I4D100K twin: {n} transactions ...")
+    db = quest_generator(n_transactions=n, avg_transaction_len=10,
+                         avg_pattern_len=4, n_items=1000, seed=42)
+
+    miner = FrequentItemsetMiner(
+        min_support=args.min_support, store=args.store,
+        checkpoint_dir=args.ckpt_dir,
+    )
+    t0 = time.time()
+    res = miner.mine(db)
+    dt = time.time() - t0
+    print(f"\nmined in {dt:.1f}s with store={args.store} "
+          f"(min_count={res.min_count})")
+    for lv in res.levels:
+        print(f"  level k={lv.k}: {lv.n_candidates:6d} candidates -> "
+              f"{lv.n_frequent:6d} frequent  ({lv.seconds:.2f}s)")
+    print(f"total frequent itemsets: {len(res.itemsets)} (max k={res.max_k})")
+    print(f"checkpoints in {args.ckpt_dir} — kill and re-run to test restart")
+
+
+if __name__ == "__main__":
+    main()

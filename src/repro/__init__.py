@@ -1,0 +1,16 @@
+"""repro — MapReduce Apriori with pluggable candidate stores, on JAX/TPU.
+
+Public surface:
+  repro.core        — the paper's contribution (miner, engine, stores, hadoop_sim)
+  repro.kernels     — Pallas support-count kernel (+ ref oracle)
+  repro.models      — 10-arch composable LM stack (train / prefill / decode)
+  repro.configs     — architecture registry and shapes
+  repro.train       — optimizer, train step, fault-tolerant trainer
+  repro.serve       — batched serving engine
+  repro.distributed — sharding rules, checkpointing, elastic restart, compression
+  repro.data        — transaction generators + LM pipeline
+  repro.analytics   — frequent token-set mining over training streams
+  repro.launch      — mesh, dryrun, train/serve launchers
+"""
+
+__version__ = "1.0.0"

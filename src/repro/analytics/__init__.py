@@ -1,0 +1,3 @@
+from repro.analytics.token_miner import TokenSetMiner
+
+__all__ = ["TokenSetMiner"]

@@ -1,0 +1,45 @@
+"""Frequent token-set mining over the LM training stream.
+
+Apriori as a first-class framework feature: windows of training tokens are
+transactions, token ids are items, and the MapReduce engine mines frequent
+token co-occurrence sets (data-quality / dedup / contamination analytics that
+run alongside training on the same mesh). Works with every candidate store,
+so the paper's data-structure comparison applies unchanged at LM scale.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.miner import FrequentItemsetMiner, MiningResult
+from repro.data.pipeline import SyntheticLM
+
+
+class TokenSetMiner:
+    def __init__(
+        self,
+        min_support: float = 0.05,
+        store: str = "bitmap",
+        window: int = 32,
+        max_k: int = 4,
+        mesh=None,
+    ):
+        self.window = window
+        self.miner = FrequentItemsetMiner(
+            min_support=min_support, store=store, max_k=max_k, mesh=mesh)
+
+    def mine_steps(self, pipeline: SyntheticLM, steps) -> MiningResult:
+        """Mine frequent token-sets from the given training steps' batches."""
+        transactions = []
+        for s in steps:
+            transactions.extend(pipeline.transactions_at(s, self.window))
+        return self.miner.mine(transactions)
+
+    @staticmethod
+    def report(result: MiningResult, top: int = 10) -> str:
+        rows = sorted(result.itemsets.items(), key=lambda kv: -kv[1])[:top]
+        lines = [f"frequent token-sets (min_count={result.min_count}, "
+                 f"{result.n_transactions} windows):"]
+        for s, c in rows:
+            lines.append(f"  {list(s)} -> {c}")
+        return "\n".join(lines)

@@ -1,0 +1,15 @@
+"""The paper's contribution: MapReduce Apriori with pluggable candidate stores."""
+
+from repro.core.miner import FrequentItemsetMiner, MiningResult
+from repro.core.engine import MapReduceEngine
+from repro.core.itemsets import apriori_gen, brute_force_frequent
+from repro.core.hadoop_sim import run_mapreduce_apriori
+
+__all__ = [
+    "FrequentItemsetMiner",
+    "MiningResult",
+    "MapReduceEngine",
+    "apriori_gen",
+    "brute_force_frequent",
+    "run_mapreduce_apriori",
+]

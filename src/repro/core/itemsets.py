@@ -1,0 +1,106 @@
+"""Canonical itemset encoding and Apriori candidate generation (join + prune).
+
+Items are non-negative integer ids. An itemset is a strictly increasing tuple of
+item ids. Frequent-itemset levels ``L_k`` are represented as sorted lists of such
+tuples (lexicographic order), which is the representation the classic
+Agrawal-Srikant join assumes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+Itemset = Tuple[int, ...]
+
+
+def sort_level(itemsets: Iterable[Itemset]) -> List[Itemset]:
+    """Canonicalize a level: unique, lexicographically sorted tuples."""
+    return sorted(set(tuple(sorted(s)) for s in itemsets))
+
+
+def apriori_gen(level: Sequence[Itemset]) -> List[Itemset]:
+    """Generate candidate (k+1)-itemsets from frequent k-itemsets.
+
+    Join step: two k-itemsets sharing their first k-1 items (and with the last
+    item of the first lexicographically smaller) produce one candidate.
+    Prune step: drop candidates with any infrequent k-subset (Apriori property).
+    """
+    if not level:
+        return []
+    k = len(level[0])
+    level = sort_level(level)
+    freq = set(level)
+    out: List[Itemset] = []
+    n = len(level)
+    i = 0
+    while i < n:
+        # All itemsets sharing the first k-1 items form one contiguous group.
+        prefix = level[i][: k - 1]
+        j = i
+        while j < n and level[j][: k - 1] == prefix:
+            j += 1
+        group = level[i:j]
+        for a in range(len(group)):
+            for b in range(a + 1, len(group)):
+                cand = group[a] + (group[b][-1],)
+                if _all_subsets_frequent(cand, freq):
+                    out.append(cand)
+        i = j
+    return out
+
+
+def _all_subsets_frequent(cand: Itemset, freq: set) -> bool:
+    k1 = len(cand)
+    # The two subsets dropping the last two items are the parents; skip them.
+    for drop in range(k1 - 2):
+        if cand[:drop] + cand[drop + 1 :] not in freq:
+            return False
+    return True
+
+
+def brute_force_counts(
+    transactions: Sequence[Sequence[int]], candidates: Sequence[Itemset]
+) -> Dict[Itemset, int]:
+    """Oracle: count each candidate by direct set containment."""
+    tsets = [frozenset(t) for t in transactions]
+    out: Dict[Itemset, int] = {}
+    for c in candidates:
+        cs = frozenset(c)
+        out[c] = sum(1 for t in tsets if cs <= t)
+    return out
+
+
+def brute_force_frequent(
+    transactions: Sequence[Sequence[int]], min_count: int, max_k: int = 12
+) -> Dict[Itemset, int]:
+    """Oracle: full level-wise mining with brute-force counting."""
+    from collections import Counter
+
+    c1: Counter = Counter()
+    for t in transactions:
+        for it in set(t):
+            c1[(int(it),)] += 1
+    result = {s: c for s, c in c1.items() if c >= min_count}
+    level = sort_level(result.keys())
+    k = 1
+    while level and k < max_k:
+        cands = apriori_gen(level)
+        counts = brute_force_counts(transactions, cands)
+        frequent = {s: c for s, c in counts.items() if c >= min_count}
+        result.update(frequent)
+        level = sort_level(frequent.keys())
+        k += 1
+    return result
+
+
+def level_to_matrix(level: Sequence[Itemset], dtype=np.int32) -> np.ndarray:
+    """(C, k) matrix of a canonical level; rows in lexicographic order."""
+    if not level:
+        return np.zeros((0, 0), dtype=dtype)
+    return np.asarray(sort_level(level), dtype=dtype)
+
+
+def matrix_to_level(mat: np.ndarray) -> List[Itemset]:
+    return [tuple(int(x) for x in row) for row in np.asarray(mat)]

@@ -1,0 +1,167 @@
+"""User-facing frequent-itemset miner: the paper's Driver (Algorithm 1).
+
+``FrequentItemsetMiner`` runs the level-wise loop — Job1 (1-itemsets) then one
+counting job per level — over any candidate store and pass-combining strategy,
+with checkpoint/restart so a preempted mining run resumes at the last completed
+level (the Hadoop analogue: completed jobs are never re-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import MapReduceEngine
+from repro.core.itemsets import Itemset, apriori_gen, level_to_matrix, sort_level
+from repro.core.stores import encode_db
+
+
+@dataclasses.dataclass
+class LevelStats:
+    k: int
+    n_candidates: int
+    n_frequent: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class MiningResult:
+    itemsets: Dict[Itemset, int]          # frequent itemset -> global support count
+    min_count: int
+    n_transactions: int
+    levels: List[LevelStats]
+    item_map: np.ndarray                  # dense id -> original item id
+
+    def frequent_at(self, k: int) -> Dict[Itemset, int]:
+        return {s: c for s, c in self.itemsets.items() if len(s) == k}
+
+    @property
+    def max_k(self) -> int:
+        return max((len(s) for s in self.itemsets), default=0)
+
+
+class FrequentItemsetMiner:
+    def __init__(
+        self,
+        min_support: float = 0.01,
+        store: str = "perfect_hash",
+        strategy: str = "spc",
+        mesh=None,
+        data_axes: Tuple[str, ...] = ("data",),
+        max_k: int = 16,
+        block_n: int = 2048,
+        checkpoint_dir: Optional[str] = None,
+    ) -> None:
+        self.min_support = min_support
+        self.store = store
+        self.strategy = strategy
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.max_k = max_k
+        self.block_n = block_n
+        self.checkpoint_dir = checkpoint_dir
+
+    # ------------------------------------------------------------------
+    def mine(self, transactions: Sequence[Sequence[int]]) -> MiningResult:
+        from repro.core import strategies
+
+        n = len(transactions)
+        min_count = max(1, int(np.ceil(self.min_support * n)))
+        engine = MapReduceEngine(
+            store=self.store, mesh=self.mesh, data_axes=self.data_axes,
+            block_n=self.block_n,
+        )
+
+        state = self._try_restore(n, min_count)
+        if state is None:
+            # Job1: frequent 1-itemsets over the raw item universe.
+            t0 = time.perf_counter()
+            max_item = max((max(t) for t in transactions if len(t)), default=0)
+            hist = engine.count_items(transactions, int(max_item) + 1)
+            frequent_items = np.nonzero(hist >= min_count)[0]
+            item_map = frequent_items.astype(np.int64)  # dense id -> original id
+            itemsets: Dict[Itemset, int] = {
+                (int(it),): int(hist[it]) for it in frequent_items
+            }
+            levels = [LevelStats(1, int(max_item) + 1, len(frequent_items),
+                                 time.perf_counter() - t0)]
+            level = [(int(np.searchsorted(item_map, it)),) for it in frequent_items]
+            k = 2
+        else:
+            itemsets, levels, level, k, item_map = state
+
+        # Dense re-encode over frequent items only (Apriori property: no
+        # candidate may contain an infrequent item).
+        remap = {int(orig): dense for dense, orig in enumerate(item_map)}
+        dense_transactions = [
+            [remap[int(x)] for x in t if int(x) in remap] for t in transactions
+        ]
+        enc = encode_db(dense_transactions, n_items=len(item_map))
+        engine.place(enc)
+
+        combiner = strategies.get(self.strategy)
+        for stats, freq_dense in combiner(
+            engine, sort_level(level), min_count, start_k=k, max_k=self.max_k
+        ):
+            levels.append(stats)
+            for s, c in freq_dense.items():
+                orig = tuple(int(item_map[i]) for i in s)
+                itemsets[orig] = int(c)
+            level = sort_level(freq_dense.keys())
+            self._checkpoint(itemsets, levels, level, stats.k + 1, item_map,
+                             n, min_count)
+
+        return MiningResult(
+            itemsets=itemsets, min_count=min_count, n_transactions=n,
+            levels=levels, item_map=item_map,
+        )
+
+    # -- fault tolerance ------------------------------------------------
+    def _ckpt_path(self) -> Optional[str]:
+        if self.checkpoint_dir is None:
+            return None
+        return os.path.join(self.checkpoint_dir, "miner_state.npz")
+
+    def _checkpoint(self, itemsets, levels, level, next_k, item_map, n, min_count):
+        path = self._ckpt_path()
+        if path is None:
+            return
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        # ``level`` arrives in dense ids; persist original ids so a restart
+        # (which recomputes the dense remap) stays consistent.
+        orig_level = [[int(item_map[i]) for i in s] for s in level]
+        payload = {
+            "itemsets": json.dumps(
+                [[list(s), c] for s, c in itemsets.items()]
+            ),
+            "levels": json.dumps([dataclasses.asdict(s) for s in levels]),
+            "level": json.dumps(orig_level),
+            "next_k": next_k,
+            "n": n,
+            "min_count": min_count,
+        }
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, item_map=item_map, **payload)
+        os.replace(tmp, path)  # atomic snapshot
+
+    def _try_restore(self, n: int, min_count: int):
+        path = self._ckpt_path()
+        if path is None or not os.path.exists(path):
+            return None
+        z = np.load(path, allow_pickle=False)
+        if int(z["n"]) != n or int(z["min_count"]) != min_count:
+            return None  # stale checkpoint from a different run
+        itemsets = {tuple(s): int(c) for s, c in json.loads(str(z["itemsets"]))}
+        levels = [LevelStats(**d) for d in json.loads(str(z["levels"]))]
+        level = [tuple(s) for s in json.loads(str(z["level"]))]
+        next_k = int(z["next_k"])
+        item_map = z["item_map"]
+        # Stored levels are in original ids; the loop needs dense ids.
+        remap = {int(orig): dense for dense, orig in enumerate(item_map)}
+        dense_level = [tuple(remap[i] for i in s) for s in level]
+        return itemsets, levels, dense_level, next_k, item_map

@@ -1,0 +1,19 @@
+"""Faithful CPU implementations of the paper's three candidate stores.
+
+These mirror the Java classes described in §4 of the paper (InnerNode/LeafNode
+hash tree, linear-search TrieNode trie, and the hash-table trie) and are used
+(a) as correctness oracles for the TPU array-layout stores and (b) to reproduce
+the paper's comparative experiments on CPU.
+"""
+
+from repro.core.sequential.hashtree import HashTree
+from repro.core.sequential.trie import Trie
+from repro.core.sequential.hashtable_trie import HashTableTrie
+
+SEQUENTIAL_STORES = {
+    "hash_tree": HashTree,
+    "trie": Trie,
+    "hash_table_trie": HashTableTrie,
+}
+
+__all__ = ["HashTree", "Trie", "HashTableTrie", "SEQUENTIAL_STORES"]

@@ -1,0 +1,42 @@
+"""TPU array-layout candidate stores (see DESIGN.md §2.2).
+
+Each store re-expresses one of the paper's candidate data structures as a
+fixed-shape array program suitable for jit/shard_map:
+
+=================  =====================  =========================================
+paper structure    store                  per-level matching primitive
+=================  =====================  =========================================
+hash-table trie    ``perfect_hash``       one O(1) gather into the transaction bitmap
+trie               ``sorted_prefix``      binary search in the sorted transaction
+hash tree          ``hash_bucket``        bucket probe + linear scan over the bucket
+(beyond paper)     ``bitmap``             dense (T·Cᵀ == k) matmul on the MXU
+=================  =====================  =========================================
+
+All stores implement ``count_block(enc_block, cand) -> int32[C]`` as a pure JAX
+function over a block of encoded transactions, and produce identical counts.
+"""
+
+from repro.core.stores.base import EncodedDB, encode_db, pad_candidates, ITEM_PAD
+from repro.core.stores.perfect_hash import PerfectHashStore
+from repro.core.stores.sorted_prefix import SortedPrefixStore
+from repro.core.stores.hash_bucket import HashBucketStore
+from repro.core.stores.bitmap import BitmapMXUStore
+
+ARRAY_STORES = {
+    "perfect_hash": PerfectHashStore,
+    "sorted_prefix": SortedPrefixStore,
+    "hash_bucket": HashBucketStore,
+    "bitmap": BitmapMXUStore,
+}
+
+__all__ = [
+    "EncodedDB",
+    "encode_db",
+    "pad_candidates",
+    "ITEM_PAD",
+    "PerfectHashStore",
+    "SortedPrefixStore",
+    "HashBucketStore",
+    "BitmapMXUStore",
+    "ARRAY_STORES",
+]

@@ -1,0 +1,81 @@
+"""Shared encoding for the array-layout candidate stores."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+# Sentinel larger than any item id; keeps padded rows sorted for searchsorted.
+ITEM_PAD = np.int32(2**30)
+
+
+@dataclasses.dataclass
+class EncodedDB:
+    """Device encoding of a transaction database over F (frequent) items.
+
+    Items are *remapped* to dense ids [0, F). The dense remap is exactly the
+    "perfect hash" of the paper's hash-table trie: a candidate item indexes the
+    transaction bitmap directly, no probing.
+
+    padded:   (N, L) int32, each row sorted ascending, padded with ITEM_PAD.
+    bitmap:   (N, F_pad) uint8 multi-hot; F_pad a multiple of 128 and > F, so
+              column F_pad - 1 is guaranteed all-zero (used by candidate pads).
+    n_items:  F, the number of real (frequent) item columns.
+    """
+
+    padded: np.ndarray
+    bitmap: np.ndarray
+    n_items: int
+
+    @property
+    def n_transactions(self) -> int:
+        return self.padded.shape[0]
+
+    @property
+    def f_pad(self) -> int:
+        return self.bitmap.shape[1]
+
+    def pad_transactions_to(self, n: int) -> "EncodedDB":
+        """Pad N up to ``n`` with empty transactions (match nothing)."""
+        if n == self.n_transactions:
+            return self
+        extra = n - self.n_transactions
+        pad_rows = np.full((extra, self.padded.shape[1]), ITEM_PAD, np.int32)
+        pad_bits = np.zeros((extra, self.f_pad), np.uint8)
+        return EncodedDB(
+            padded=np.concatenate([self.padded, pad_rows]),
+            bitmap=np.concatenate([self.bitmap, pad_bits]),
+            n_items=self.n_items,
+        )
+
+
+def encode_db(
+    transactions: Sequence[Sequence[int]],
+    n_items: int,
+    min_len: int = 8,
+    align: int = 128,
+) -> EncodedDB:
+    """Encode transactions whose items are already dense ids in [0, n_items)."""
+    n = len(transactions)
+    lmax = max(min_len, max((len(set(t)) for t in transactions), default=1))
+    padded = np.full((n, lmax), ITEM_PAD, dtype=np.int32)
+    f_pad = ((n_items // align) + 1) * align  # strictly greater than n_items
+    bitmap = np.zeros((n, f_pad), dtype=np.uint8)
+    for i, t in enumerate(transactions):
+        s = sorted(set(int(x) for x in t))
+        padded[i, : len(s)] = s
+        bitmap[i, s] = 1
+    return EncodedDB(padded=padded, bitmap=bitmap, n_items=n_items)
+
+
+def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128) -> np.ndarray:
+    """Pad the candidate count C up to ``align``; pad rows point at the
+    always-zero bitmap column so they can never be matched."""
+    c, k = cand.shape if cand.size else (0, 1)
+    c_pad = max(align, ((c + align - 1) // align) * align)
+    out = np.full((c_pad, k), f_pad - 1, dtype=np.int32)
+    if cand.size:
+        out[:c] = cand
+    return out

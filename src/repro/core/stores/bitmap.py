@@ -1,0 +1,54 @@
+"""Bitmap-MXU store — beyond-paper candidate store (DESIGN.md §2.2).
+
+Transactions are multi-hot rows T (N, F); candidates are k-hot rows C (Cc, F).
+Containment is arithmetic: ``(T @ Cᵀ)[n, c] == k_c`` — a dense bf16 matmul that
+runs on the MXU, converting the paper's pointer-chasing subset() into the
+highest-arithmetic-intensity primitive the hardware has. The Pallas kernel in
+``repro.kernels.support_count`` implements the blocked/fused version; the
+pure-jnp path here is also the kernel's oracle. Set ``use_kernel=True`` to run
+the Pallas kernel (Mosaic on TPU, interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.stores.base import EncodedDB
+
+
+def candidates_to_khot(cand: np.ndarray, f_pad: int) -> tuple[np.ndarray, np.ndarray]:
+    """(C, k) item matrix -> (C, F_pad) k-hot f32 rows + int32 k vector."""
+    c, k = cand.shape
+    khot = np.zeros((c, f_pad), dtype=np.float32)
+    rows = np.repeat(np.arange(c), k)
+    np.add.at(khot, (rows, cand.reshape(-1)), 1.0)
+    # Pad rows stack k hits on the always-zero column; their dot is 0 != k.
+    kvec = np.full((c,), k, dtype=np.int32)
+    return khot, kvec
+
+
+class BitmapMXUStore:
+    name = "bitmap"
+    use_kernel = False  # flipped by engine/benchmarks to run the Pallas kernel
+
+    @staticmethod
+    def transaction_inputs(enc: EncodedDB) -> dict:
+        return {"bitmap": enc.bitmap}
+
+    @staticmethod
+    def candidate_inputs(cand: np.ndarray, enc: EncodedDB) -> dict:
+        khot, kvec = candidates_to_khot(cand, enc.f_pad)
+        return {"khot": khot, "kvec": kvec}
+
+    @classmethod
+    def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:
+        if cls.use_kernel:
+            from repro.kernels.support_count import support_count
+
+            return support_count(trans["bitmap"], cands["khot"], cands["kvec"])
+        t = trans["bitmap"].astype(jnp.bfloat16)
+        c = cands["khot"].astype(jnp.bfloat16)
+        dots = jnp.dot(t, c.T, preferred_element_type=jnp.float32)  # (Nb, C)
+        matched = dots == cands["kvec"].astype(jnp.float32)[None, :]
+        return jnp.sum(matched.astype(jnp.int32), axis=0)

@@ -1,0 +1,49 @@
+"""Hash-bucket store — the hash tree, TPU-native.
+
+The hash tree routes a transaction by hashing items (h(i) = i % child_max_size)
+and then *linearly scans* the candidate list at each reached leaf — the paper's
+"two phases of operation" that make it slow. The array layout keeps both
+phases: (1) a bucket-probe phase compares the hash of every transaction item
+against every candidate's routing hash (the leaf linear scan, paid even for
+candidates that cannot match), then (2) the full containment check via bitmap
+gathers for probed candidates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.stores.base import EncodedDB, ITEM_PAD
+
+
+class HashBucketStore:
+    name = "hash_bucket"
+    child_max_size = 20  # paper §5.2
+
+    @classmethod
+    def transaction_inputs(cls, enc: EncodedDB) -> dict:
+        padded = enc.padded
+        t_hash = np.where(padded == ITEM_PAD, -1, padded % cls.child_max_size)
+        return {"bitmap": enc.bitmap, "t_hash": t_hash.astype(np.int32)}
+
+    @classmethod
+    def candidate_inputs(cls, cand: np.ndarray, enc: EncodedDB) -> dict:
+        bucket = (cand[:, 0] % cls.child_max_size).astype(np.int32)
+        return {"cand": cand, "cand_bucket": bucket}
+
+    @classmethod
+    def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:
+        bitmap, t_hash = trans["bitmap"], trans["t_hash"]
+        cand, cand_bucket = cands["cand"], cands["cand_bucket"]
+        k = cand.shape[1]
+        # Phase 1 — bucket probe: compare every transaction item hash against
+        # every candidate's routing hash (the leaf linear scan, full cost).
+        probed = jnp.any(
+            t_hash[:, None, :] == cand_bucket[None, :, None], axis=-1
+        )  # (Nb, C)
+        # Phase 2 — containment check via per-level gathers for probed lanes.
+        matched = probed & bitmap[:, cand[:, 0]].astype(bool)
+        for level in range(1, k):
+            matched = matched & bitmap[:, cand[:, level]].astype(bool)
+        return jnp.sum(matched.astype(jnp.int32), axis=0)

@@ -1,0 +1,45 @@
+"""Sorted-prefix store — the trie, TPU-native.
+
+A trie resolves each level by scanning the node's ordered children; the
+array-layout dual is an ordered search of the candidate's next item inside the
+*sorted transaction row* — ``searchsorted`` per level (log L comparisons, the
+ordered-scan cost model) instead of the perfect-hash store's O(1) gather.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.stores.base import EncodedDB
+
+
+class SortedPrefixStore:
+    name = "sorted_prefix"
+
+    @staticmethod
+    def transaction_inputs(enc: EncodedDB) -> dict:
+        return {"padded": enc.padded}
+
+    @staticmethod
+    def candidate_inputs(cand: np.ndarray, enc: EncodedDB) -> dict:
+        return {"cand": cand}
+
+    @staticmethod
+    def count_block(trans: dict, cands: dict) -> jnp.ndarray:
+        """trans["padded"]: (Nb, L) sorted int32 (ITEM_PAD tail); cand (C, k)."""
+        padded, cand = trans["padded"], cands["cand"]
+        k = cand.shape[1]
+
+        def level_found(items):  # items: (C,) -> (Nb, C) bool
+            def per_row(row):
+                pos = jnp.clip(jnp.searchsorted(row, items), 0, row.shape[0] - 1)
+                return row[pos] == items
+
+            return jax.vmap(per_row)(padded)
+
+        matched = level_found(cand[:, 0])
+        for level in range(1, k):
+            matched = matched & level_found(cand[:, level])
+        return jnp.sum(matched.astype(jnp.int32), axis=0)

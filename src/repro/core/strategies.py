@@ -1,0 +1,124 @@
+"""Pass-combining strategies for the level-wise loop (related work [17]).
+
+SPC (Single Pass Counting) is the paper's own driver: one counting job per
+level k. FPC (Fixed Passes Combined-counting) counts a fixed number of
+consecutive candidate generations in one job; DPC (Dynamic Passes
+Combined-counting) keeps extending the combined wave until a candidate budget
+is hit. Combined waves generate C_{k+1} from *candidates* C_k (speculative —
+pruning checks run against C_k, not L_k), exactly the FPC/DPC trade-off: fewer
+jobs vs. more (possibly useless) candidates counted.
+
+Each strategy is a generator yielding ``(LevelStats, {itemset: count})`` per
+counting job, so the driver can checkpoint after every job.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.itemsets import Itemset, apriori_gen, level_to_matrix, sort_level
+
+
+def _count_level(engine, cands: List[Itemset], min_count: int):
+    mat = level_to_matrix(cands)
+    counts = engine.count_candidates(mat)
+    frequent = {
+        tuple(int(x) for x in mat[i]): int(counts[i])
+        for i in range(mat.shape[0])
+        if counts[i] >= min_count
+    }
+    return frequent
+
+
+def spc(engine, level: Sequence[Itemset], min_count: int, start_k: int, max_k: int):
+    """One job per level (the paper's Algorithm 1)."""
+    from repro.core.miner import LevelStats
+
+    k = start_k
+    while level and k <= max_k:
+        t0 = time.perf_counter()
+        cands = apriori_gen(level)
+        if not cands:
+            return
+        frequent = _count_level(engine, cands, min_count)
+        yield LevelStats(k, len(cands), len(frequent), time.perf_counter() - t0), frequent
+        level = sort_level(frequent.keys())
+        k += 1
+
+
+def _combined(engine, level, min_count, start_k, max_k, should_extend):
+    """Shared FPC/DPC body: one job counts a wave of candidate levels."""
+    from repro.core.miner import LevelStats
+
+    k = start_k
+    while level and k <= max_k:
+        t0 = time.perf_counter()
+        waves: List[List[Itemset]] = []
+        cands = apriori_gen(level)
+        while cands:
+            waves.append(cands)
+            if k + len(waves) - 1 >= max_k or not should_extend(waves):
+                break
+            cands = apriori_gen(cands)  # speculative: join/prune against C_k
+        if not waves:
+            return
+        all_cands = [c for wave in waves for c in wave]
+        # Mixed k in one job: count each wave as its own matrix (one device
+        # dispatch per k, one logical job) and merge.
+        frequent: Dict[Itemset, int] = {}
+        for wave in waves:
+            frequent.update(_count_level(engine, wave, min_count))
+        # Enforce downward closure across the combined wave: a (k+1)-itemset
+        # counted speculatively is only kept if all its k-subsets survived.
+        frequent = _closure_filter(frequent)
+        stats = LevelStats(
+            k + len(waves) - 1, len(all_cands), len(frequent),
+            time.perf_counter() - t0,
+        )
+        yield stats, frequent
+        top_k = max((len(s) for s in frequent), default=0)
+        level = sort_level(s for s in frequent if len(s) == top_k)
+        k = top_k + 1 if frequent else k + len(waves)
+
+
+def _closure_filter(frequent: Dict[Itemset, int]) -> Dict[Itemset, int]:
+    if not frequent:
+        return frequent
+    keep: Dict[Itemset, int] = {}
+    ks = sorted({len(s) for s in frequent})
+    surviving = {s for s in frequent if len(s) == ks[0]}
+    keep.update({s: frequent[s] for s in surviving})
+    for k in ks[1:]:
+        for s in (x for x in frequent if len(x) == k):
+            if all(s[:i] + s[i + 1 :] in surviving for i in range(k)):
+                keep[s] = frequent[s]
+        surviving = {s for s in keep if len(s) == k}
+    return keep
+
+
+def fpc(engine, level, min_count, start_k, max_k, passes: int = 3):
+    """Fixed number of combined passes per job."""
+    return _combined(
+        engine, level, min_count, start_k, max_k,
+        should_extend=lambda waves: len(waves) < passes,
+    )
+
+
+def dpc(engine, level, min_count, start_k, max_k, budget: int = 50_000):
+    """Extend the wave while the combined candidate count stays in budget."""
+    return _combined(
+        engine, level, min_count, start_k, max_k,
+        should_extend=lambda waves: sum(len(w) for w in waves) < budget,
+    )
+
+
+_STRATEGIES = {"spc": spc, "fpc": fpc, "dpc": dpc}
+
+
+def get(name: str):
+    if name not in _STRATEGIES:
+        raise ValueError(f"unknown strategy {name!r}; pick from {list(_STRATEGIES)}")
+    return _STRATEGIES[name]

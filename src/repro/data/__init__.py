@@ -1,0 +1,15 @@
+from repro.data.transactions import (
+    quest_generator,
+    bms_webview_twin,
+    paper_datasets,
+    encode_padded,
+    encode_bitmap,
+)
+
+__all__ = [
+    "quest_generator",
+    "bms_webview_twin",
+    "paper_datasets",
+    "encode_padded",
+    "encode_bitmap",
+]

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    default_rules,
+    batch_pspec,
+    act_pspec,
+)
+
+__all__ = ["ShardingRules", "default_rules", "batch_pspec", "act_pspec"]

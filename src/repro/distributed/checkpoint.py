@@ -1,0 +1,150 @@
+"""Sharding-agnostic checkpointing with atomic snapshots and elastic restore.
+
+Every tensor is written as its *global* value (numpy ``.npy``) together with a
+manifest describing the tree structure and step metadata. Restore therefore
+works on any mesh/device count — the loader re-shards with whatever
+NamedShardings the current run asks for (elastic restart after losing a pod).
+
+Snapshot protocol (the Hadoop-grade bit):
+  1. write everything into ``step_N.tmp/``
+  2. fsync files, then atomically rename to ``step_N/``
+  3. update the ``LATEST`` pointer file atomically
+A crash mid-write leaves only a ``.tmp`` directory, which restore ignores and
+a later save garbage-collects. ``keep`` bounds disk usage.
+
+On a real multi-host cluster each host would write only the shards it owns
+(jax.experimental array serialization); single-process here, the global-value
+format keeps restore elastic, which is the property under test.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomic global-value snapshot. Returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "extra": extra or {}, "tensors": []}
+    for i, (key, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+            arr = arr.view(np.uint16)  # np.save can't serialize ml_dtypes
+        fname = f"t{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["tensors"].append(
+            {"key": key, "file": fname, "dtype": logical_dtype,
+             "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    snaps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in snaps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    for d in os.listdir(ckpt_dir):  # orphaned partial writes
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    pointer = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(pointer):
+        return None
+    with open(pointer) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, tree_like, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    ``shardings``: optional matching tree of NamedSharding — re-shards onto
+    the *current* mesh regardless of the mesh at save time (elastic restart).
+    Returns (tree, step, extra) or None if no snapshot exists.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None
+    snap = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(snap, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {t["key"]: t for t in manifest["tensors"]}
+
+    leaves_like = _flatten(tree_like)
+    shard_leaves = (
+        [s for _, s in _flatten(shardings)] if shardings is not None
+        else [None] * len(leaves_like)
+    )
+    out_leaves = []
+    for (key, like), shard in zip(leaves_like, shard_leaves):
+        meta = by_key.get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing tensor {key!r}")
+        arr = np.load(os.path.join(snap, meta["file"]))
+        if meta["dtype"] == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {like.shape}")
+        if shard is not None:
+            out_leaves.append(jax.device_put(arr, shard))
+        else:
+            out_leaves.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out_leaves),
+        manifest["step"],
+        manifest["extra"],
+    )

@@ -1,0 +1,45 @@
+"""Int8 gradient compression with error feedback.
+
+On a real multi-pod mesh the cross-pod gradient all-reduce is the scarcest
+bandwidth (ICI within a pod, DCI between pods); quantizing the per-parameter
+gradient block to int8 with a per-tensor scale cuts that payload 2x vs bf16
+(4x vs f32) at the cost of quantization noise, which error feedback (carrying
+the residual into the next step) removes to first order. Here the transform
+is applied to the gradients inside the jit'd train step — numerically
+identical to compressing the collective payload — and the EF state is part of
+the optimizer state tree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec, spec
+
+
+def ef_abstract(params_abstract):
+    def one(s: ParamSpec):
+        return spec(s.shape, s.axes, dtype=jnp.bfloat16, init="zeros")
+
+    return jax.tree.map(one, params_abstract, is_leaf=is_spec)
+
+
+def compress_grads(grads, ef_state):
+    """Quantize grads to int8 (per-tensor scale) + error feedback.
+
+    Returns (dequantized grads, new ef_state). The int8 tensor is what a
+    custom collective would move across pods.
+    """
+
+    def one(g, ef):
+        g32 = g.astype(jnp.float32) + ef.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), (g32 - deq).astype(ef.dtype)
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_ef

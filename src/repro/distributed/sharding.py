@@ -1,0 +1,87 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Mesh axes:
+  pod    — outermost DP axis across pods (multi-pod mesh only)
+  data   — within-pod DP / FSDP axis
+  model  — tensor/expert-parallel axis
+
+Logical names used by the model code:
+
+  batch     activation batch dim            -> (pod, data)
+  fsdp      parameter ZeRO shard dim        -> (pod, data)
+  heads     attention heads / q-proj out    -> model
+  kv_heads  kv heads                        -> model
+  mlp       FFN hidden                      -> model
+  vocab     embedding rows / logits         -> model
+  experts   MoE expert dim                  -> model
+  embed     d_model                         -> None (replicated; FSDP takes
+            the other dim of every matrix, so nothing is fully replicated)
+  seq       sequence dim of activations     -> None (context-parallel opt-in)
+  cache_seq KV-cache sequence dim           -> None
+  layers    scan/stack dim                  -> None
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import logical_to_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    def pspec(self, axes) -> P:
+        return logical_to_pspec(axes, self.rules)
+
+    def with_overrides(self, **kv) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kv)
+        return ShardingRules(new)
+
+
+def default_rules(multi_pod: bool = False, *, fsdp: bool = True,
+                  context_parallel: bool = False) -> ShardingRules:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    rules = {
+        "batch": dp,
+        "fsdp": dp if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        # EP degree = model axis. (Measured: extending experts over the data
+        # axes makes GSPMD all-gather the (G,S,E,C) dispatch tensor — 19 TB —
+        # because the einsum contracts the data-sharded token dim against a
+        # data-sharded expert dim. Full-mesh EP needs an explicit shard_map
+        # all-to-all; see EXPERIMENTS.md §Perf iteration A2.)
+        "experts": "model",
+        "embed": None,
+        "embed_tp": "model",   # alternative: shard d_model itself (decode TP)
+        "seq": dp if context_parallel else None,
+        # KV caches shard their sequence dim over the model axis: kv_heads
+        # rarely divide a 16-way axis (10, 8, 4, 2, 1 heads), and an
+        # unsharded 32k cache replicates ~50-190 GB/device. Decode attention
+        # over the seq-sharded cache costs one small psum for the softmax.
+        "cache_seq": "model",
+        "layers": None,
+        "state": "model",      # SSM / RG-LRU recurrent width
+        # Flash-tile fallback chain: when neither kv_heads nor the group dim
+        # divides the model axis (starcoder 4x12, qwen 2x6, gemma2 4x2 ...),
+        # the q-chunk dim carries it instead — sequence-parallel attention
+        # tiles. Divisible-head archs dedup this away.
+        "attn_q": "model",
+    }
+    return ShardingRules(rules)
+
+
+def batch_pspec(rules: ShardingRules) -> P:
+    return rules.pspec(("batch", None))
+
+
+def act_pspec(rules: ShardingRules, *axes) -> P:
+    return rules.pspec(axes)

@@ -1,0 +1,4 @@
+from repro.kernels.support_count.ops import support_count
+from repro.kernels.support_count.ref import support_count_ref
+
+__all__ = ["support_count", "support_count_ref"]

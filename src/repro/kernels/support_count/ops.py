@@ -1,0 +1,66 @@
+"""jit'd public wrapper for the support-count kernel: pads inputs to block
+multiples, dispatches to the Pallas kernel (interpret mode on CPU), trims pads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.support_count.kernel import support_count_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_c", "block_f", "interpret")
+)
+def _padded_call(bitmap, khot, kvec, *, block_n, block_c, block_f, interpret):
+    n, f = bitmap.shape
+    c = khot.shape[0]
+    np_, cp, fp = _round_up(n, block_n), _round_up(c, block_c), _round_up(f, block_f)
+    bitmap = jnp.pad(bitmap, ((0, np_ - n), (0, fp - f)))
+    khot = jnp.pad(khot, ((0, cp - c), (0, fp - f)))
+    # Padded candidates get k=-1: a zero dot never equals -1, so count 0.
+    kvec = jnp.pad(kvec, (0, cp - c), constant_values=-1)
+    out = support_count_pallas(
+        bitmap, khot, kvec,
+        block_n=block_n, block_c=block_c, block_f=block_f, interpret=interpret,
+    )
+    return out[:c]
+
+
+def support_count(
+    bitmap,
+    khot,
+    kvec,
+    *,
+    block_n: int = 512,
+    block_c: int = 512,
+    block_f: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Count, for every candidate row of ``khot``, the number of ``bitmap``
+    rows that contain all of its items. See kernel.py for the blocked design.
+
+    interpret=None auto-selects interpret mode off-TPU so the kernel body is
+    validated on CPU; on TPU it compiles to Mosaic.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bitmap = jnp.asarray(bitmap)
+    khot = jnp.asarray(khot)
+    kvec = jnp.asarray(kvec, dtype=jnp.int32)
+    # Clamp blocks for small problems (keeps the grid non-degenerate).
+    block_n = min(block_n, _round_up(bitmap.shape[0], 8))
+    block_c = min(block_c, _round_up(khot.shape[0], 128))
+    block_f = min(block_f, _round_up(bitmap.shape[1], 128))
+    return _padded_call(
+        bitmap, khot, kvec,
+        block_n=block_n, block_c=block_c, block_f=block_f, interpret=interpret,
+    )

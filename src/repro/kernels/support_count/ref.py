@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the support-count kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def support_count_ref(
+    bitmap: jnp.ndarray,  # (N, F) {0,1}, any float/int dtype
+    khot: jnp.ndarray,    # (C, F) k-hot rows
+    kvec: jnp.ndarray,    # (C,) int32 number of items per candidate
+) -> jnp.ndarray:
+    """int32[C]: for each candidate, #transactions containing all its items."""
+    dots = jnp.dot(
+        bitmap.astype(jnp.float32), khot.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+    matched = dots == kvec.astype(jnp.float32)[None, :]
+    return jnp.sum(matched.astype(jnp.int32), axis=0)

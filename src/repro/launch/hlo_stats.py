@@ -1,0 +1,78 @@
+"""Extract roofline terms from a compiled SPMD executable.
+
+``cost_analysis()`` on the per-device SPMD module gives per-device FLOPs and
+bytes. Collective traffic is not in cost_analysis, so we parse the optimized
+HLO text and sum the *result-shape* bytes of every collective op (per device,
+consistent with the other two terms).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (result-shape sizes)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # "%name = TYPE op-name(...)" — result type precedes the op name.
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        base = op.removesuffix("-start")
+        if op.endswith("-done") or base not in _COLLECTIVES:
+            continue
+        out[base] = out.get(base, 0) + _shape_bytes(type_str)
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    *,
+    peak_flops: float = 197e12,   # bf16 / chip (TPU v5e-like)
+    hbm_bw: float = 819e9,        # B/s / chip
+    link_bw: float = 50e9,        # B/s / link
+) -> Dict[str, float]:
+    t_compute = flops / peak_flops
+    t_memory = hbm_bytes / hbm_bw
+    t_collective = coll_bytes / link_bw
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = {"t_compute_s": "compute", "t_memory_s": "memory",
+                           "t_collective_s": "collective"}[dom]
+    step_time = max(t_compute, t_memory, t_collective)
+    terms["step_time_bound_s"] = step_time
+    return terms

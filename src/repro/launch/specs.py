@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh, rules)`` returns the argument tree that the
+corresponding step function is lowered with:
+
+  train    -> {"tokens", "labels"} (+ modality inputs)
+  prefill  -> {"tokens"} (+ modality inputs) and a zeroed cache tree
+  decode   -> {"tokens": (B,1)}, cache tree, cache_len scalar
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import model as M
+from repro.models.params import shape_structs
+
+
+def _sds(shape, dtype, mesh, rules: ShardingRules, axes):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    from repro.models.params import logical_to_pspec
+
+    pspec = logical_to_pspec(axes, rules.rules, shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+
+def batch_specs(cfg: ModelConfig, sh: ShapeConfig, mesh: Optional[Mesh],
+                rules: ShardingRules):
+    b = sh.global_batch
+    s = sh.seq_len if sh.kind != "decode" else 1
+    out = {}
+    if cfg.frontend == "audio_frames":
+        out["frames"] = _sds((b, sh.seq_len if sh.kind != "decode" else 1, cfg.d_model),
+                             jnp.bfloat16, mesh, rules, ("batch", None, None))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, rules, ("batch", None))
+    if sh.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32, mesh, rules, ("batch", None))
+    if cfg.frontend == "vision_patches" and sh.kind != "decode":
+        out["vis_embeds"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16,
+                                 mesh, rules, ("batch", None, None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, sh: ShapeConfig, mesh, rules: ShardingRules):
+    ab = M.abstract_cache(cfg, sh.global_batch, sh.seq_len)
+    return shape_structs(ab, mesh, rules.rules)
+
+
+def param_specs(cfg: ModelConfig, mesh, rules: ShardingRules):
+    return shape_structs(M.abstract_params(cfg), mesh, rules.rules)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, rules: ShardingRules):
+    """Full argument tree for the step function of this shape."""
+    sh = LM_SHAPES[shape_name]
+    batch = batch_specs(cfg, sh, mesh, rules)
+    if sh.kind == "train":
+        return {"batch": batch}
+    if sh.kind == "prefill":
+        return {"batch": batch, "cache": cache_specs(cfg, sh, mesh, rules)}
+    return {
+        "batch": batch,
+        "cache": cache_specs(cfg, sh, mesh, rules),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,143 @@
+"""Abstract-first parameter system.
+
+Models are pure functions over nested-dict parameter trees. ``init`` functions
+build *abstract* trees whose leaves are :class:`ParamSpec` (shape, dtype,
+logical axes, initializer). From an abstract tree we can
+
+- ``materialize(rng, tree)``  -> concrete arrays (smoke tests / real training),
+- ``shape_structs(tree, mesh, rules)`` -> sharded ShapeDtypeStructs (dry-run:
+  zero allocation, exactly what ``jit(...).lower`` wants),
+- ``shardings(tree, mesh, rules)`` -> NamedShardings (in_shardings / ckpt).
+
+Logical axis names decouple model code from the mesh; ``rules`` map each name
+to mesh axes (see repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()  # logical axis name per dim (None = replicated)
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def spec(shape, axes, dtype=jnp.bfloat16, init="normal", scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, tuple(axes), init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def materialize(rng: jax.Array, tree, dtype_override=None):
+    """Concrete init. Fan-in-scaled normal for matmuls; zeros for biases/norm offsets."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(key, s: ParamSpec):
+        dtype = dtype_override or s.dtype
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale / math.sqrt(max(1, fan_in))
+        if s.init == "embed":
+            std = s.scale
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in zip(keys, leaves)])
+
+
+def logical_to_pspec(
+    axes: Sequence[Optional[str]],
+    rules: dict,
+    shape: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    With ``shape``+``mesh`` given, any dim whose size is not divisible by the
+    product of its mesh axes falls back to replication (the MaxText rule —
+    e.g. 2 KV heads cannot be sharded over a 16-way model axis).
+    """
+    out = []
+    used: set = set()
+    for i, name in enumerate(axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # A mesh axis may appear at most once in a PartitionSpec.
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if shape is not None and mesh is not None and mesh_axes:
+            # Progressive fallback: drop leading axes until the dim divides
+            # (e.g. 256 experts on a 512-chip pod pair -> ("data","model")).
+            while mesh_axes:
+                total = 1
+                for a in mesh_axes:
+                    total *= mesh.shape[a]
+                if shape[i] % total == 0:
+                    break
+                mesh_axes = mesh_axes[1:]
+            if not mesh_axes:
+                out.append(None)
+                continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) != 1 else mesh_axes[0])
+        if not mesh_axes:
+            out[-1] = None
+    return P(*out)
+
+
+def shardings(tree, mesh: Mesh, rules: dict):
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, logical_to_pspec(s.axes, rules, s.shape, mesh))
+
+    return tree_map_specs(one, tree)
+
+
+def shape_structs(tree, mesh: Optional[Mesh] = None, rules: Optional[dict] = None,
+                  dtype_override=None):
+    def one(s: ParamSpec):
+        dt = dtype_override or s.dtype
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return jax.ShapeDtypeStruct(
+            s.shape, dt,
+            sharding=NamedSharding(
+                mesh, logical_to_pspec(s.axes, rules, s.shape, mesh)),
+        )
+
+    return tree_map_specs(one, tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    total = 0
+    for l in leaves:
+        shape = l.shape
+        total += int(np.prod(shape)) if shape else 1
+    return total

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixer: x -> {gate branch: GeLU(W_y x)} ⊙ {recurrent branch:
+causal-conv -> RG-LRU} -> W_out. The RG-LRU diagonal recurrence
+  r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+  log a_t = -c · softplus(Λ) · r_t
+  h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+is evaluated with an associative scan over the sequence (log-space products),
+and as an O(1) state update for decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import spec
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.width or cfg.d_model
+
+
+def rglru_abstract(cfg: ModelConfig):
+    d, w = cfg.d_model, _width(cfg)
+    k = cfg.rglru.d_conv
+    return {
+        "w_y": spec((d, w), ("fsdp", "state")),
+        "w_x": spec((d, w), ("fsdp", "state")),
+        "conv_w": spec((k, w), (None, "state")),
+        "conv_b": spec((w,), ("state",), init="zeros"),
+        "w_a": spec((w, w), (None, "state")),
+        "b_a": spec((w,), ("state",), init="zeros"),
+        "w_i": spec((w, w), (None, "state")),
+        "b_i": spec((w,), ("state",), init="zeros"),
+        "lam": spec((w,), ("state",), dtype=jnp.float32, init="ones"),
+        "w_out": spec((w, d), ("state", "fsdp")),
+    }
+
+
+def _gates(params, xr):
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xr, params["w_a"]).astype(jnp.float32)
+        + params["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xr, params["w_i"]).astype(jnp.float32)
+        + params["b_i"]
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r        # (.., W) f32
+    gated_x = i * xr.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return log_a, beta * gated_x
+
+
+def rglru_layer(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    k = cfg.rglru.d_conv
+    y_gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", x, params["w_y"]))
+    xr = jnp.einsum("...d,dw->...w", x, params["w_x"])
+    pad = jnp.pad(xr, ((0, 0), (k - 1, 0), (0, 0)))
+    xr = sum(pad[:, i : i + x.shape[1]] * params["conv_w"][i] for i in range(k))
+    xr = xr + params["conv_b"]
+
+    log_a, b = _gates(params, xr)                           # (B,S,W) f32
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (log_a, b) pairs.
+    def combine(lhs, rhs):
+        la1, b1 = lhs
+        la2, b2 = rhs
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    out = h.astype(x.dtype) * y_gate
+    return jnp.einsum("...w,wd->...d", out, params["w_out"])
+
+
+def rglru_decode_state_abstract(cfg: ModelConfig, batch: int):
+    w = _width(cfg)
+    k = cfg.rglru.d_conv
+    return {
+        "h": spec((batch, w), ("batch", "state"), dtype=jnp.float32, init="zeros"),
+        "conv_buf": spec((batch, k - 1, w), ("batch", None, "state"),
+                         dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
+def rglru_decode(params, x, cache, cfg: ModelConfig):
+    """x: (B, 1, D) -> (out, new_cache)."""
+    k = cfg.rglru.d_conv
+    y_gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", x, params["w_y"]))
+    xr = jnp.einsum("...d,dw->...w", x, params["w_x"])      # (B,1,W)
+    buf = jnp.concatenate([cache["conv_buf"], xr.astype(cache["conv_buf"].dtype)], axis=1)
+    xr = sum(buf[:, i : i + 1] * params["conv_w"][i] for i in range(k))
+    xr = xr + params["conv_b"]
+    log_a, b = _gates(params, xr[:, 0])                     # (B,W)
+    h = cache["h"] * jnp.exp(log_a) + b
+    out = h[:, None].astype(x.dtype) * y_gate
+    out = jnp.einsum("...w,wd->...d", out, params["w_out"])
+    return out, {"h": h, "conv_buf": buf[:, 1:]}

@@ -1,0 +1,186 @@
+"""Layer-stack assembly: unrolled head/tail + scanned super-blocks.
+
+Heterogeneous layer patterns (gemma2 local/global, Griffin rec/rec/attn,
+vision self×4/cross) are grouped into *super-blocks* of one pattern period;
+the super-block is homogeneous across depth, so the stack scans over it with
+stacked parameters (small HLO, fast compiles) while layers that fall outside
+the periodic region (MoE dense heads, pattern remainders) run unrolled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.params import ParamSpec, is_spec, spec
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    head: List[Tuple[str, str]]      # unrolled leading layers
+    pattern: List[Tuple[str, str]]   # one super-block period
+    n_super: int                     # scanned super-blocks
+    tail: List[Tuple[str, str]]      # unrolled trailing layers
+
+
+def plan(cfg: ModelConfig) -> StackPlan:
+    kinds = blocks.layer_kinds(cfg)
+    p = len(cfg.pattern)
+    n_head = cfg.moe.n_dense_layers if cfg.moe else 0
+    assert n_head % p == 0 or p == 1, "dense head must align with the pattern"
+    rest = cfg.n_layers - n_head
+    n_super = rest // p if cfg.scan_layers else 0
+    n_tail = rest - n_super * p
+    return StackPlan(
+        head=kinds[:n_head],
+        pattern=kinds[n_head : n_head + p] if n_super else [],
+        n_super=n_super,
+        tail=kinds[n_head + n_super * p :],
+    )
+
+
+def _stack_specs(tree, n: int):
+    def one(s: ParamSpec):
+        return spec((n, *s.shape), ("layers", *s.axes), dtype=s.dtype,
+                    init=s.init, scale=s.scale)
+
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def stack_abstract(cfg: ModelConfig):
+    pl = plan(cfg)
+    out = {"head": {}, "scan": {}, "tail": {}}
+    for i, (t, c) in enumerate(pl.head):
+        out["head"][str(i)] = blocks.layer_abstract(cfg, t, c)
+    for j, (t, c) in enumerate(pl.pattern):
+        out["scan"][str(j)] = _stack_specs(blocks.layer_abstract(cfg, t, c), pl.n_super)
+    for i, (t, c) in enumerate(pl.tail):
+        out["tail"][str(i)] = blocks.layer_abstract(cfg, t, c)
+    return out
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+def stack_apply(params, x, cfg: ModelConfig, *, positions, vis_embeds=None):
+    """Training/scoring forward. Returns (x, aux)."""
+    pl = plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, (t, c) in enumerate(pl.head):
+        fn = _remat(
+            lambda lp, xx, t=t, c=c: blocks.layer_apply(
+                lp, xx, t, c, cfg, positions=positions, vis_embeds=vis_embeds),
+            cfg,
+        )
+        x, a = fn(params["head"][str(i)], x)
+        aux = aux + a
+
+    if pl.n_super:
+        def body(carry, xs):
+            xx, au = carry
+            for j, (t, c) in enumerate(pl.pattern):
+                xx, a = blocks.layer_apply(
+                    xs[str(j)], xx, t, c, cfg,
+                    positions=positions, vis_embeds=vis_embeds,
+                )
+                au = au + a
+            return (xx, au), None
+
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg), (x, aux), params["scan"])
+
+    for i, (t, c) in enumerate(pl.tail):
+        fn = _remat(
+            lambda lp, xx, t=t, c=c: blocks.layer_apply(
+                lp, xx, t, c, cfg, positions=positions, vis_embeds=vis_embeds),
+            cfg,
+        )
+        x, a = fn(params["tail"][str(i)], x)
+        aux = aux + a
+    return x, aux
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    pl = plan(cfg)
+    out = {"head": {}, "scan": {}, "tail": {}}
+    for i, (t, _) in enumerate(pl.head):
+        out["head"][str(i)] = blocks.cache_abstract(cfg, t, batch, max_len)
+    for j, (t, _) in enumerate(pl.pattern):
+        out["scan"][str(j)] = _stack_specs(
+            blocks.cache_abstract(cfg, t, batch, max_len), pl.n_super)
+    for i, (t, _) in enumerate(pl.tail):
+        out["tail"][str(i)] = blocks.cache_abstract(cfg, t, batch, max_len)
+    return out
+
+
+def stack_prefill(params, x, cfg: ModelConfig, cache, *, positions, vis_embeds=None):
+    pl = plan(cfg)
+    for i, (t, c) in enumerate(pl.head):
+        x, cache["head"][str(i)] = blocks.layer_prefill(
+            params["head"][str(i)], x, t, c, cfg,
+            positions=positions, cache=cache["head"][str(i)],
+            vis_embeds=vis_embeds,
+        )
+
+    if pl.n_super:
+        def body(xx, xs):
+            lp, cc = xs
+            new_cc = {}
+            for j, (t, c) in enumerate(pl.pattern):
+                xx, new_cc[str(j)] = blocks.layer_prefill(
+                    lp[str(j)], xx, t, c, cfg,
+                    positions=positions, cache=cc[str(j)], vis_embeds=vis_embeds,
+                )
+            return xx, new_cc
+
+        x, cache["scan"] = jax.lax.scan(
+            _remat(body, cfg), x, (params["scan"], cache["scan"]))
+
+    for i, (t, c) in enumerate(pl.tail):
+        x, cache["tail"][str(i)] = blocks.layer_prefill(
+            params["tail"][str(i)], x, t, c, cfg,
+            positions=positions, cache=cache["tail"][str(i)],
+            vis_embeds=vis_embeds,
+        )
+    return x, cache
+
+
+def stack_decode(params, x, cfg: ModelConfig, cache, cache_len, *, positions):
+    pl = plan(cfg)
+    for i, (t, c) in enumerate(pl.head):
+        x, cache["head"][str(i)] = blocks.layer_decode(
+            params["head"][str(i)], x, t, c, cfg,
+            cache=cache["head"][str(i)], cache_len=cache_len, positions=positions,
+        )
+
+    if pl.n_super:
+        def body(xx, xs):
+            lp, cc = xs
+            new_cc = {}
+            for j, (t, c) in enumerate(pl.pattern):
+                xx, new_cc[str(j)] = blocks.layer_decode(
+                    lp[str(j)], xx, t, c, cfg,
+                    cache=cc[str(j)], cache_len=cache_len, positions=positions,
+                )
+            return xx, new_cc
+
+        x, cache["scan"] = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+
+    for i, (t, c) in enumerate(pl.tail):
+        x, cache["tail"][str(i)] = blocks.layer_decode(
+            params["tail"][str(i)], x, t, c, cfg,
+            cache=cache["tail"][str(i)], cache_len=cache_len, positions=positions,
+        )
+    return x, cache

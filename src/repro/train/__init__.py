@@ -1,0 +1,4 @@
+from repro.train.optimizer import OptConfig, opt_abstract, opt_update, lr_at
+from repro.train.train_step import make_train_step
+
+__all__ = ["OptConfig", "opt_abstract", "opt_update", "lr_at", "make_train_step"]

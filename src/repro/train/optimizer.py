@@ -1,0 +1,82 @@
+"""AdamW with ZeRO-sharded moments (moments inherit the parameter sharding,
+which is already FSDP-sharded over the data axes) and optional bf16 moments
+for the trillion-parameter archs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec, spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moments_dtype: str = "float32"   # "bfloat16" to halve optimizer memory
+
+
+def lr_at(step, cfg: OptConfig):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def opt_abstract(params_abstract, cfg: OptConfig):
+    dt = jnp.bfloat16 if cfg.moments_dtype == "bfloat16" else jnp.float32
+
+    def mom(s: ParamSpec):
+        return spec(s.shape, s.axes, dtype=dt, init="zeros")
+
+    return {
+        "m": jax.tree.map(mom, params_abstract, is_leaf=is_spec),
+        "v": jax.tree.map(mom, params_abstract, is_leaf=is_spec),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def opt_update(params, grads, opt_state, step, cfg: OptConfig):
+    """One AdamW step. Returns (params, opt_state, metrics)."""
+    lr = lr_at(step, cfg)
+    gnorm = global_norm(grads)
+    scale = 1.0
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) - lr * (update + decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

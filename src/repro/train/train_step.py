@@ -1,0 +1,86 @@
+"""jit-able train step: microbatched grad accumulation, clipping, AdamW,
+optional int8 gradient compression with error feedback."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import OptConfig, opt_update
+
+
+def _microbatch_grads(params, batch, cfg: ModelConfig, microbatches: int):
+    """Mean loss/grads over ``microbatches`` sequential slices (lax.scan)."""
+
+    def loss_of(p, mb):
+        loss, metrics = M.loss_fn(p, mb, cfg)
+        return loss, metrics
+
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gacc, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+    grads = jax.tree.map(lambda g, p: (g / microbatches).astype(p.dtype), gacc, params)
+    loss = loss_sum / microbatches
+    return loss, {"ce": loss, "aux": jnp.zeros(())}, grads
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: OptConfig,
+    microbatches: int = 1,
+    compress: bool = False,   # int8 grad compression + error feedback
+):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt, metrics).
+
+    ``batch`` is a dict with "tokens"/"labels" (+ "frames"/"vis_embeds").
+    With ``compress=True`` the optimizer state additionally carries the
+    error-feedback residual tree under key "ef" (see opt_abstract_with_ef).
+    Donate params and opt_state at jit time.
+    """
+    from repro.distributed.compression import compress_grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = _microbatch_grads(params, batch, cfg, microbatches)
+        if compress:
+            grads, new_ef = compress_grads(grads, opt_state["ef"])
+        params, new_opt, opt_metrics = opt_update(
+            params, grads, opt_state, step, ocfg)
+        if compress:
+            new_opt["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def opt_abstract_with_ef(params_abstract, ocfg: OptConfig, compress: bool = False):
+    from repro.train.optimizer import opt_abstract
+    from repro.distributed.compression import ef_abstract
+
+    state = opt_abstract(params_abstract, ocfg)
+    if compress:
+        state["ef"] = ef_abstract(params_abstract)
+    return state

@@ -1,0 +1,118 @@
+"""Checkpointing, elastic restore, compression, sharding rules, hlo stats."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.compression import compress_grads, ef_abstract
+from repro.distributed.sharding import default_rules
+from repro.launch.hlo_stats import collective_bytes, roofline_terms
+from repro.models.params import logical_to_pspec, materialize, spec
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                   "c": jnp.zeros((2, 2), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    ckpt.save(d, 7, tree, extra={"note": "x"})
+    out = ckpt.restore(d, tree)
+    assert out is not None
+    restored, step, extra = out
+    assert step == 7 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, tree, keep=2)
+    snaps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert snaps == ["step_00000004", "step_00000005"]
+    # orphaned partial write is ignored and collected
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    assert ckpt.latest_step(d) == 5
+    ckpt.save(d, 6, tree, keep=2)
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Save unsharded, restore onto a mesh with explicit shardings."""
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(d, 1, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))}
+    restored, _, _ = ckpt.restore(d, tree, shardings=sh)
+    assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_compression_error_feedback_converges():
+    """Quantization error is carried, so the running sum stays unbiased."""
+    g = {"w": jnp.full((64,), 0.01, jnp.float32)}
+    ef = {"w": jnp.zeros((64,), jnp.bfloat16)}
+    total = np.zeros(64)
+    for _ in range(50):
+        dq, ef = compress_grads(g, ef)
+        total += np.asarray(dq["w"], np.float64)
+    np.testing.assert_allclose(total, 0.5, rtol=0.05)
+
+
+class _FakeMesh:
+    """Only .shape is consulted by logical_to_pspec."""
+
+    shape = {"data": 2, "model": 2, "pod": 2}
+
+
+def test_logical_to_pspec_divisibility():
+    mesh = _FakeMesh()
+    rules = default_rules().rules
+    rules = dict(rules, batch=("data",))
+    # divisible: sharded
+    p = logical_to_pspec(("batch", "mlp"), rules, (4, 8), mesh)
+    assert p == jax.sharding.PartitionSpec("data", "model")
+    # not divisible: falls back to replication on that dim
+    p = logical_to_pspec(("batch", "kv_heads"), rules, (4, 3), mesh)
+    assert p == jax.sharding.PartitionSpec("data", None)
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = bf16[1024,128] all-reduce(%x), replica_groups={}
+  %ag.1 = f32[256] all-gather(%y), dimensions={0}
+  %rs = (bf16[64,64], bf16[64,64]) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u8[32] collective-permute-start(%z)
+  %cpd = u8[32] collective-permute-done(%cp)
+  %dot = f32[4,4] dot(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 1024 * 128 * 2
+    assert out["all-gather"] == 256 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 64 * 2
+    assert out["collective-permute"] == 32
+    assert "dot" not in out
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(197e12, 819e9, 50e9)
+    assert abs(t["t_compute_s"] - 1.0) < 1e-9
+    assert abs(t["t_memory_s"] - 1.0) < 1e-9
+    assert abs(t["t_collective_s"] - 1.0) < 1e-9
+    t = roofline_terms(1e12, 819e9 * 5, 0)
+    assert t["bottleneck"] == "memory"

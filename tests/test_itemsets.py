@@ -1,0 +1,84 @@
+"""apriori_gen correctness + Apriori-property invariants (hypothesis)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.itemsets import (
+    apriori_gen,
+    brute_force_counts,
+    brute_force_frequent,
+    level_to_matrix,
+    matrix_to_level,
+    sort_level,
+)
+
+
+def reference_gen(level):
+    """Oracle candidate generation: all (k+1)-supersets of level items whose
+    every k-subset is in the level."""
+    level = sort_level(level)
+    if not level:
+        return []
+    k = len(level[0])
+    freq = set(level)
+    items = sorted({i for s in level for i in s})
+    out = []
+    for cand in itertools.combinations(items, k + 1):
+        if all(c in freq for c in itertools.combinations(cand, k)):
+            out.append(cand)
+    return out
+
+
+@given(
+    st.sets(
+        st.frozensets(st.integers(0, 12), min_size=2, max_size=2),
+        min_size=0, max_size=40,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_apriori_gen_matches_reference(level_sets):
+    level = sort_level(tuple(sorted(s)) for s in level_sets)
+    assert sorted(apriori_gen(level)) == sorted(reference_gen(level))
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(0, 15), min_size=1, max_size=8),
+        min_size=1, max_size=60,
+    ),
+    st.integers(1, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_downward_closure(transactions, min_count):
+    """Apriori property: every subset of a frequent itemset is frequent."""
+    result = brute_force_frequent(transactions, min_count)
+    freq = set(result)
+    for s in freq:
+        for drop in range(len(s)):
+            sub = s[:drop] + s[drop + 1 :]
+            if sub:
+                assert sub in freq
+                assert result[sub] >= result[s]
+
+
+def test_gen_three_levels():
+    # worked example from the paper's Fig 1: all 3-subsets of {1..5} frequent
+    l2 = [tuple(c) for c in itertools.combinations(range(1, 6), 2)]
+    c3 = apriori_gen(l2)
+    assert sorted(c3) == [tuple(c) for c in itertools.combinations(range(1, 6), 3)]
+
+
+def test_matrix_roundtrip():
+    level = [(3, 5, 7), (1, 2, 9), (1, 2, 4)]
+    mat = level_to_matrix(level)
+    assert mat.shape == (3, 3)
+    assert matrix_to_level(mat) == sort_level(level)
+
+
+def test_brute_force_counts():
+    db = [[1, 2, 3], [1, 2], [2, 3], [1, 2, 3, 4]]
+    counts = brute_force_counts(db, [(1, 2), (2, 3), (1, 4), (4,)])
+    assert counts == {(1, 2): 3, (2, 3): 3, (1, 4): 1, (4,): 1}

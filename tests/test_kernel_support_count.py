@@ -1,0 +1,77 @@
+"""Pallas support-count kernel vs the pure-jnp oracle: shape/dtype sweeps.
+
+The kernel body executes in interpret mode on CPU (Mosaic on a real TPU).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.stores.bitmap import candidates_to_khot
+from repro.kernels.support_count import support_count, support_count_ref
+
+
+def _case(rng, n, f, c, k, density=0.3):
+    bitmap = (rng.random((n, f)) < density).astype(np.float32)
+    cand = np.stack([rng.choice(f, k, replace=False) for _ in range(c)]).astype(np.int32)
+    khot = np.zeros((c, f), np.float32)
+    for i, row in enumerate(cand):
+        khot[i, row] = 1.0
+    kvec = np.full(c, k, np.int32)
+    return bitmap, khot, kvec
+
+
+@pytest.mark.parametrize("n,f,c,k", [
+    (8, 16, 4, 1),
+    (100, 130, 70, 2),       # non-multiples exercise padding
+    (256, 128, 128, 3),      # exact tiles
+    (513, 257, 300, 5),      # every dim ragged
+    (64, 512, 1024, 4),      # C > block
+    (1200, 96, 33, 7),
+])
+def test_kernel_matches_ref_shapes(n, f, c, k):
+    rng = np.random.default_rng(n * 7 + c)
+    bitmap, khot, kvec = _case(rng, n, f, c, k)
+    ref = np.asarray(support_count_ref(jnp.array(bitmap), jnp.array(khot),
+                                       jnp.array(kvec)))
+    out = np.asarray(support_count(bitmap, khot, kvec,
+                                   block_n=128, block_c=128, block_f=128))
+    np.testing.assert_array_equal(ref, out)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, np.int8, np.uint8])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    bitmap, khot, kvec = _case(rng, 96, 64, 40, 3)
+    out = support_count(bitmap.astype(dtype), khot.astype(dtype), kvec,
+                        block_n=64, block_c=64, block_f=64)
+    ref = support_count_ref(jnp.array(bitmap), jnp.array(khot), jnp.array(kvec))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 256, 64), (512, 512, 512)])
+def test_kernel_block_shapes(blocks):
+    bn, bc, bf = blocks
+    rng = np.random.default_rng(11)
+    bitmap, khot, kvec = _case(rng, 200, 140, 180, 4)
+    out = support_count(bitmap, khot, kvec, block_n=bn, block_c=bc, block_f=bf)
+    ref = support_count_ref(jnp.array(bitmap), jnp.array(khot), jnp.array(kvec))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_kernel_mixed_k_and_pads():
+    """Mixed candidate sizes in one call (FPC combined waves)."""
+    rng = np.random.default_rng(5)
+    f = 64
+    bitmap = (rng.random((128, f)) < 0.4).astype(np.float32)
+    cands = [rng.choice(f, k, replace=False) for k in (2, 3, 4) for _ in range(10)]
+    khot = np.zeros((30, f), np.float32)
+    kvec = np.zeros(30, np.int32)
+    for i, row in enumerate(cands):
+        khot[i, row] = 1.0
+        kvec[i] = len(row)
+    out = np.asarray(support_count(bitmap, khot, kvec, block_n=64, block_c=64,
+                                   block_f=64))
+    ref = np.asarray(support_count_ref(jnp.array(bitmap), jnp.array(khot),
+                                       jnp.array(kvec)))
+    np.testing.assert_array_equal(ref, out)

@@ -1,0 +1,148 @@
+"""SSD and RG-LRU mixers vs naive sequential recurrences; MoE vs dense oracle."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, RGLRUConfig
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.params import materialize
+
+
+def _cfg_ssm(chunk):
+    return dataclasses.replace(
+        get_reduced("mamba2-2.7b"),
+        ssm=SSMConfig(d_state=16, head_dim=8, expand=2, d_conv=4, chunk=chunk),
+    )
+
+
+def naive_ssd(params, u, cfg):
+    """Token-by-token recurrence h_t = exp(dtA) h_{t-1} + dt B x, y = C h."""
+    d_inner, h, p, n = ssm_mod._dims(cfg)
+    b, s, _ = u.shape
+    z, xbc, dt = ssm_mod._split_proj(params, u, cfg)
+    xbc = ssm_mod._causal_conv(params, xbc, cfg)
+    x = np.asarray(xbc[..., :d_inner].reshape(b, s, h, p), np.float64)
+    bm = np.asarray(xbc[..., d_inner : d_inner + n], np.float64)
+    cm = np.asarray(xbc[..., d_inner + n :], np.float64)
+    dt = np.asarray(dt, np.float64)
+    a = -np.exp(np.asarray(params["a_log"], np.float64))
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        decay = np.exp(dt[:, t] * a)                        # (B,H)
+        dx = x[:, t] * dt[:, t][..., None]                  # (B,H,P)
+        state = state * decay[..., None, None] + np.einsum(
+            "bn,bhp->bhpn", bm[:, t], dx)
+        ys[:, t] = np.einsum("bn,bhpn->bhp", cm[:, t], state)
+    ys = ys + np.asarray(params["d_skip"])[None, None, :, None] * np.asarray(x, np.float64)
+    y = ys.reshape(b, s, d_inner)
+    zf = np.asarray(z, np.float64)
+    y = y * (zf / (1 + np.exp(-zf)))
+    y = y / np.sqrt((y ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = y * np.asarray(params["norm_scale"])
+    return y @ np.asarray(params["w_out"], np.float64)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_matches_recurrence(chunk):
+    cfg = _cfg_ssm(chunk)
+    params = materialize(jax.random.PRNGKey(0), ssm_mod.ssd_abstract(cfg),
+                         dtype_override=jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    got = np.asarray(ssm_mod.ssd_layer(params, u, cfg), np.float64)
+    want = naive_ssd(params, u, cfg)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_unroll_matches_scan():
+    cfg = _cfg_ssm(16)
+    params = materialize(jax.random.PRNGKey(0), ssm_mod.ssd_abstract(cfg),
+                         dtype_override=jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    a = ssm_mod.ssd_layer(params, u, cfg)
+    b = ssm_mod.ssd_layer(params, u, dataclasses.replace(cfg, unroll_loops=True))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def naive_rglru(params, x, cfg):
+    k = cfg.rglru.d_conv
+    y_gate = np.asarray(jax.nn.gelu(jnp.einsum("...d,dw->...w", x, params["w_y"])),
+                        np.float64)
+    xr = jnp.einsum("...d,dw->...w", x, params["w_x"])
+    pad = jnp.pad(xr, ((0, 0), (k - 1, 0), (0, 0)))
+    xr = sum(pad[:, i : i + x.shape[1]] * params["conv_w"][i] for i in range(k))
+    xr = xr + params["conv_b"]
+    log_a, bvec = rglru_mod._gates(params, xr)
+    log_a, bvec = np.asarray(log_a, np.float64), np.asarray(bvec, np.float64)
+    b, s, w = log_a.shape
+    h = np.zeros((b, w))
+    hs = np.zeros((b, s, w))
+    for t in range(s):
+        h = h * np.exp(log_a[:, t]) + bvec[:, t]
+        hs[:, t] = h
+    out = hs * y_gate
+    return out @ np.asarray(params["w_out"], np.float64)
+
+
+def test_rglru_assoc_scan_matches_loop():
+    cfg = get_reduced("recurrentgemma-2b")
+    params = materialize(jax.random.PRNGKey(0), rglru_mod.rglru_abstract(cfg),
+                         dtype_override=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, cfg.d_model), jnp.float32)
+    got = np.asarray(rglru_mod.rglru_layer(params, x, cfg), np.float64)
+    want = naive_rglru(params, x, cfg)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_moe_no_drop_equals_dense_oracle():
+    """With capacity >= tokens, MoE output equals explicit per-token expert mix."""
+    cfg = dataclasses.replace(
+        get_reduced("kimi-k2-1t-a32b"),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, n_shared=0,
+                      capacity_factor=64.0, group_size=64),
+    )
+    params = materialize(jax.random.PRNGKey(0), moe_mod.moe_abstract(cfg),
+                         dtype_override=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    out, aux = moe_mod.moe_layer(params, x, cfg)
+
+    # oracle: for each token, softmax-route, renormalized top-2 expert mix
+    xf = np.asarray(x, np.float64).reshape(-1, cfg.d_model)
+    logits = xf @ np.asarray(params["router"], np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    want = np.zeros_like(xf)
+    for i, (p_row, x_row) in enumerate(zip(probs, xf)):
+        top = np.argsort(-p_row)[: cfg.moe.top_k]
+        gates = p_row[top] / p_row[top].sum()
+        for g, e in zip(gates, top):
+            up = x_row @ np.asarray(params["w_up"][e], np.float64)
+            gate = x_row @ np.asarray(params["w_gate"][e], np.float64)
+            hval = (up / (1 + np.exp(-up))) * gate
+            want[i] += g * (hval @ np.asarray(params["w_down"][e], np.float64))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64).reshape(-1, cfg.d_model), want,
+        atol=2e-3, rtol=2e-3)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(
+        get_reduced("kimi-k2-1t-a32b"),
+        moe=MoEConfig(n_experts=2, top_k=1, d_ff_expert=16, n_shared=0,
+                      capacity_factor=0.25, group_size=32),
+    )
+    params = materialize(jax.random.PRNGKey(0), moe_mod.moe_abstract(cfg),
+                         dtype_override=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model), jnp.float32)
+    out, _ = moe_mod.moe_layer(params, x, cfg)
+    # some tokens must be dropped (zero output rows)
+    norms = np.linalg.norm(np.asarray(out)[0], axis=-1)
+    assert (norms < 1e-6).any()

@@ -1,0 +1,74 @@
+"""Faithful Java-equivalent structures: counting + generation correctness."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hadoop_sim import run_mapreduce_apriori
+from repro.core.itemsets import apriori_gen, brute_force_counts, brute_force_frequent, sort_level
+from repro.core.sequential import SEQUENTIAL_STORES, HashTree, Trie, HashTableTrie
+
+DB = st.lists(
+    st.lists(st.integers(0, 25), min_size=1, max_size=9),
+    min_size=1, max_size=40,
+)
+
+
+@pytest.mark.parametrize("name", list(SEQUENTIAL_STORES))
+@given(db=DB, k=st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_counting_matches_brute_force(name, db, k):
+    items = sorted({int(i) for t in db for i in t})
+    if len(items) < k:
+        return
+    cands = list(itertools.combinations(items[:10], k))[:25]
+    if not cands:
+        return
+    store = SEQUENTIAL_STORES[name](cands)
+    for t in db:
+        store.count_transaction(t)
+    got = store.counts()
+    want = brute_force_counts(db, cands)
+    for c in cands:
+        assert got.get(c, 0) == want[c], (name, c)
+
+
+@pytest.mark.parametrize("cls", [Trie, HashTableTrie])
+@given(level=st.sets(st.frozensets(st.integers(0, 10), min_size=2, max_size=2),
+                     min_size=1, max_size=25))
+@settings(max_examples=25, deadline=None)
+def test_trie_generation_matches_apriori_gen(cls, level):
+    level = sort_level(tuple(sorted(s)) for s in level)
+    trie = cls(level)
+    assert sorted(trie.generate_candidates()) == sorted(apriori_gen(level))
+
+
+def test_hash_tree_paper_params():
+    """child_max_size=20, leaf_max_size ignored (paper §5.2)."""
+    cands = list(itertools.combinations(range(40), 3))[:200]
+    tree = HashTree(cands, child_max_size=20, leaf_max_size=None)
+    for c in cands:
+        assert tree.contains(c)
+    assert not tree.contains((37, 38, 39))
+
+
+def test_hash_tree_leaf_split_mode():
+    cands = list(itertools.combinations(range(12), 2))
+    tree = HashTree(cands, child_max_size=5, leaf_max_size=4)
+    for c in cands:
+        assert tree.contains(c)
+
+
+@pytest.mark.parametrize("structure", list(SEQUENTIAL_STORES))
+def test_hadoop_sim_full_pipeline(structure):
+    rng = np.random.default_rng(0)
+    db = [sorted(set(rng.integers(0, 20, size=rng.integers(2, 8)).tolist()))
+          for _ in range(200)]
+    res = run_mapreduce_apriori(db, 0.08, structure=structure, n_mappers=4)
+    oracle = brute_force_frequent(db, res.min_count)
+    assert res.itemsets == oracle
+    assert res.n_mappers == 4
+    assert all(len(it.mapper_seconds) == 4 for it in res.iterations)
+    assert res.parallel_seconds <= res.sequential_seconds + 1e-9
