@@ -1,6 +1,8 @@
-"""Beyond-paper: the four TPU array-layout stores on one counting wave, plus
-the Pallas support-count kernel (interpret mode on CPU: validated, and timed
-via its pure-jnp oracle, which is the identical arithmetic the MXU executes).
+"""Beyond-paper: the five TPU array-layout stores on one counting wave, the
+headline packed-popcount vs bitmap-matmul comparison with bytes-per-transaction
+accounting, plus both Pallas support-count kernels (interpret mode on CPU:
+validated, and timed via their pure-jnp oracles, which execute the identical
+arithmetic the TPU kernels do).
 """
 
 from __future__ import annotations
@@ -11,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import MapReduceEngine
 from repro.core.itemsets import apriori_gen, level_to_matrix, sort_level
-from repro.core.stores import encode_db
+from repro.core.stores import ARRAY_STORES, encode_db
 from repro.data import paper_datasets
 
 from benchmarks.common import SCALE, row, timed
@@ -35,11 +37,13 @@ def run() -> list:
 
     out = []
     counts_ref = None
-    for store in ["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap"]:
+    secs = {}
+    for store in ARRAY_STORES:
         engine = MapReduceEngine(store=store)
         engine.place(enc)
         engine.count_candidates(mat)  # compile
         counts, sec = timed(engine.count_candidates, mat, repeat=2)
+        secs[store] = sec
         if counts_ref is None:
             counts_ref = counts
         np.testing.assert_array_equal(counts, counts_ref)
@@ -48,9 +52,28 @@ def run() -> list:
             f"C={mat.shape[0]};N={enc.n_transactions}",
         ))
 
-    # Pallas kernel (interpret mode) on a trimmed slice: correctness + timing
+    # Headline: packed popcount vs bitmap bf16-matmul on the same C2 wave.
+    # bytes/txn streamed through the count: packed 1 bit per item column vs
+    # the uint8 bitmap's 8 (and 32 for the f32 k-hot oracle operand).
+    f_pad = enc.f_pad
+    out.append(row(
+        "stores_jax/packed_vs_bitmap/count_c2",
+        secs["packed_bitmap"] * 1e6,
+        f"speedup_vs_bitmap={secs['bitmap'] / secs['packed_bitmap']:.2f}x;"
+        f"bytes_per_txn_packed={f_pad // 8};bytes_per_txn_bitmap_u8={f_pad};"
+        f"bytes_per_txn_khot_f32={4 * f_pad};txn_bytes_reduction_vs_f32="
+        f"{32}x;reduction_vs_u8=8x",
+    ))
+
+    # Pallas kernels (interpret mode) on a trimmed slice: correctness + timing
     from repro.core.stores.bitmap import candidates_to_khot
-    from repro.kernels.support_count import support_count, support_count_ref
+    from repro.core.stores.packed_bitmap import pack_candidates_device
+    from repro.kernels.support_count import (
+        packed_support_count,
+        packed_support_count_ref,
+        support_count,
+        support_count_ref,
+    )
 
     n_small, c_small = 2048, 512
     bm = enc.bitmap[:n_small].astype(np.float32)
@@ -63,4 +86,18 @@ def run() -> list:
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
     out.append(row("kernel/support_count_ref(jnp)", ref_s * 1e6,
                    f"N={n_small};C={c_small};interpret_validated=yes"))
+
+    packed = enc.packed[:n_small]
+    cpacked = np.asarray(
+        pack_candidates_device(jnp.asarray(mat[:c_small]), enc.n_words))
+    pref, pref_s = timed(
+        lambda: jax.block_until_ready(packed_support_count_ref(
+            jnp.array(packed), jnp.array(cpacked), jnp.array(kvec))),
+        repeat=3)
+    pgot = packed_support_count(packed, cpacked, kvec)
+    np.testing.assert_array_equal(np.asarray(pgot), np.asarray(pref))
+    np.testing.assert_array_equal(np.asarray(pref), np.asarray(ref))
+    out.append(row("kernel/packed_support_count_ref(jnp)", pref_s * 1e6,
+                   f"N={n_small};C={c_small};W={enc.n_words};"
+                   f"interpret_validated=yes"))
     return out

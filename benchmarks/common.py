@@ -6,7 +6,8 @@ import os
 import time
 from typing import Callable
 
-SCALE = float(os.environ.get("BENCH_SCALE", "0.05"))
+DEFAULT_SCALE = 0.05
+SCALE = float(os.environ.get("BENCH_SCALE", str(DEFAULT_SCALE)))
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kwargs):

@@ -3,15 +3,43 @@
   PYTHONPATH=src python -m benchmarks.run            # all
   BENCH_SCALE=0.02 python -m benchmarks.run fig      # subset by name
 
-Prints ``name,us_per_call,derived`` CSV. Roofline numbers live in
+Prints ``name,us_per_call,derived`` CSV and persists each suite's rows as
+machine-readable ``BENCH_<suite>.json`` at the repo root (fields: name, us,
+meta) so the perf trajectory is tracked across PRs. Roofline numbers live in
 benchmarks/results/dryrun.jsonl (see repro.launch.dryrun) and are rendered by
 benchmarks/roofline_report.py.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def persist(suite: str, lines: list) -> str:
+    """Write one suite's CSV rows as BENCH_<suite>.json next to ROADMAP.md.
+
+    The canonical cross-PR trajectory file is only written at the default
+    BENCH_SCALE; smoke runs at other scales go to a scale-suffixed file so
+    they never clobber the tracked numbers. The scale is recorded either way.
+    """
+    from benchmarks.common import DEFAULT_SCALE, SCALE
+
+    rows = []
+    for line in lines:
+        if line.startswith("#"):
+            continue
+        name, us, meta = line.split(",", 2)
+        rows.append({"name": name, "us": float(us), "meta": meta})
+    stem = f"BENCH_{suite}" if SCALE == DEFAULT_SCALE else f"BENCH_{suite}@{SCALE:g}"
+    path = os.path.join(REPO_ROOT, f"{stem}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": suite, "scale": SCALE, "rows": rows}, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -36,9 +64,13 @@ def main() -> None:
         if pattern and pattern not in name:
             continue
         t0 = time.time()
+        lines = []
         for line in fn():
+            lines.append(line)
             print(line, flush=True)
-        print(f"# suite {name} done in {time.time() - t0:.1f}s", flush=True)
+        path = persist(name, lines)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s -> {path}",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ import argparse
 import time
 
 from repro.core import FrequentItemsetMiner
+from repro.core.stores import ARRAY_STORES
 from repro.data import quest_generator
 
 
@@ -19,8 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--min-support", type=float, default=0.02)
-    ap.add_argument("--store", default="bitmap",
-                    choices=["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap"])
+    ap.add_argument("--store", default="bitmap", choices=list(ARRAY_STORES))
     ap.add_argument("--ckpt-dir", default="/tmp/repro_mine_t10")
     args = ap.parse_args()
 

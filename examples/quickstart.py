@@ -28,7 +28,8 @@ def main() -> None:
     # 2. The TPU-native track: MapReduce-on-JAX with array-layout stores.
     print("\n-- JAX track (array-layout candidate stores) --")
     reference = None
-    for store in ["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap"]:
+    for store in ["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap",
+                  "packed_bitmap"]:
         res = FrequentItemsetMiner(min_support=min_support, store=store).mine(db)
         reference = reference or res.itemsets
         assert res.itemsets == reference

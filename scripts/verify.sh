@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Single entry point for builders: tier-1 tests + one fast counting-wave
+# benchmark smoke (packed vs bitmap on a down-scaled T10 twin).
+#
+#   ./scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
+BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
+
+echo "verify OK"

@@ -9,9 +9,15 @@ The transaction tensors are placed (sharded) once and reused across levels;
 each level's candidate arrays are replicated — the analogue of Hadoop's
 distributed cache shipping L_{k-1} to every mapper. A new candidate shape
 triggers one compile, the analogue of per-iteration job submission.
+
+Per wave, only the small (C, k) int32 candidate matrix crosses the host
+boundary; the store-specific candidate tensors (k-hot rows, packed words,
+bucket hashes) are built on device by the store's jit'd ``encode_candidates``.
 """
 
 from __future__ import annotations
+
+import functools
 
 from typing import Optional, Tuple
 
@@ -22,6 +28,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.stores import ARRAY_STORES, EncodedDB, pad_candidates
 from repro.core.stores.base import ITEM_PAD
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # older jax: shard_map still lives under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 class MapReduceEngine:
@@ -44,6 +55,7 @@ class MapReduceEngine:
         self._trans_device = None
         self._enc: Optional[EncodedDB] = None
         self._count_jit = None
+        self._encode_jit = None
 
     # -- placement ---------------------------------------------------------
     @property
@@ -67,6 +79,11 @@ class MapReduceEngine:
         self._trans_device = trans
         self._enc = enc
         self._count_jit = None  # built lazily (needs the candidate tree structure)
+        # Device-side candidate encoder: (C, k) int32 -> the store's candidate
+        # tensors, all built on device (jit caches per (C, k) shape).
+        self._encode_jit = jax.jit(
+            functools.partial(self.store.encode_candidates, f_pad=enc.f_pad)
+        )
 
     def _blocked_count(self, trans: dict, cands: dict) -> jnp.ndarray:
         """Mapper body: lax.map over Nb-blocks bounds peak (Nb, C) memory."""
@@ -95,7 +112,7 @@ class MapReduceEngine:
             local = self._blocked_count(trans, cands)
             return jax.lax.psum(local, self.data_axes)  # shuffle + reduce
 
-        fn = jax.shard_map(
+        fn = _shard_map(
             sharded,
             mesh=self.mesh,
             in_specs=(
@@ -122,10 +139,14 @@ class MapReduceEngine:
             return np.concatenate(parts)
         c = cand.shape[0]
         cand_p = pad_candidates(cand, self._enc.f_pad)
-        cands = self.store.candidate_inputs(cand_p, self._enc)
-        cands = {k: jnp.asarray(v) for k, v in cands.items()}
+        # Only the (C_pad, k) int32 matrix crosses the host boundary; the
+        # store's candidate tensors are expanded on device.
+        cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
         if self.mesh is not None:
             rep = NamedSharding(self.mesh, P())
+            cand_dev = jax.device_put(cand_dev, rep)
+        cands = self._encode_jit(cand_dev)
+        if self.mesh is not None:
             cands = {k: jax.device_put(v, rep) for k, v in cands.items()}
         if self._count_jit is None:
             self._count_jit = self._build_count_fn(cands)

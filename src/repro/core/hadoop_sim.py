@@ -30,6 +30,10 @@ class IterationProfile:
     n_frequent: int
     mapper_seconds: List[float]      # one entry per mapper (gen+build+count+combine)
     reduce_seconds: float
+    # Per-mapper phase breakdown (empty for Job1, which has no gen/build):
+    gen_seconds: List[float] = dataclasses.field(default_factory=list)
+    build_seconds: List[float] = dataclasses.field(default_factory=list)
+    count_seconds: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def parallel_seconds(self) -> float:
@@ -61,6 +65,28 @@ def _chunks(transactions: Sequence[Sequence[int]], n_mappers: int):
     n = len(transactions)
     size = (n + n_mappers - 1) // n_mappers
     return [transactions[i : i + size] for i in range(0, n, size)]
+
+
+def _generate_and_build(store_cls, structure: str, level, child_max_size: int):
+    """One mapper's per-iteration fixed cost, phase-timed.
+
+    The hash tree consumes an externally generated C_k (Algorithm 4); the
+    trie family generates C_k from its own L_{k-1} structure. Both paths are
+    folded here so every Job2 mapper shares one code path and the profile can
+    attribute candidate-generation vs structure-build time separately.
+    """
+    t0 = time.perf_counter()
+    if structure == "hash_tree":
+        cands = apriori_gen(level)
+        gen_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        store = store_cls(cands, child_max_size=child_max_size)
+    else:
+        cands = store_cls(level).generate_candidates()
+        gen_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        store = store_cls(cands)
+    return cands, store, gen_s, time.perf_counter() - t1
 
 
 def run_mapreduce_apriori(
@@ -107,23 +133,26 @@ def run_mapreduce_apriori(
     k = 2
     while level and k <= max_k:
         mapper_times = []
+        gen_times: List[float] = []
+        build_times: List[float] = []
+        count_times: List[float] = []
         partials = []
         n_cands = 0
         for chunk in chunks:
             t0 = time.perf_counter()
             # Every mapper re-generates C_k from the cached L_{k-1} and builds
             # its own structure — the paper's per-mapper fixed cost.
-            if structure == "hash_tree":
-                cands = apriori_gen(level)
-                store = store_cls(cands, child_max_size=child_max_size)
-            else:
-                lk = store_cls(level)
-                cands = lk.generate_candidates()
-                store = store_cls(cands)
+            cands, store, gen_s, build_s = _generate_and_build(
+                store_cls, structure, level, child_max_size
+            )
             n_cands = len(cands)
+            t1 = time.perf_counter()
             for t in chunk:
                 store.count_transaction(t)
             local = {s: c for s, c in store.counts().items() if c > 0}
+            count_times.append(time.perf_counter() - t1)
+            gen_times.append(gen_s)
+            build_times.append(build_s)
             mapper_times.append(time.perf_counter() - t0)
             partials.append(local)
         if n_cands == 0:
@@ -136,7 +165,11 @@ def run_mapreduce_apriori(
         frequent = {s: c for s, c in merged.items() if c >= min_count}
         reduce_s = time.perf_counter() - t0
         iterations.append(
-            IterationProfile(k, n_cands, len(frequent), mapper_times, reduce_s)
+            IterationProfile(
+                k, n_cands, len(frequent), mapper_times, reduce_s,
+                gen_seconds=gen_times, build_seconds=build_times,
+                count_seconds=count_times,
+            )
         )
         itemsets.update(frequent)
         level = sort_level(frequent.keys())

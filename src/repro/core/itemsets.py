@@ -12,6 +12,8 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.stores.base import ITEM_PAD
+
 Itemset = Tuple[int, ...]
 
 
@@ -93,6 +95,75 @@ def brute_force_frequent(
         level = sort_level(frequent.keys())
         k += 1
     return result
+
+
+def _rows_member(sorted_level: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """bool[Q]: is each query row present in the lexicographically sorted,
+    duplicate-free ``sorted_level`` matrix? Both (·, k) int arrays.
+
+    Rows are reduced column-by-column to a single int64 key — after each
+    column the running key is re-ranked dense via ``np.unique`` so the
+    combine ``rank * ITEM_PAD + col`` never overflows (items < ITEM_PAD).
+    The final level keys stay sorted, so membership is one searchsorted.
+    """
+    m = sorted_level.shape[0]
+    q = queries.shape[0]
+    if m == 0 or q == 0:
+        return np.zeros((q,), bool)
+    k = sorted_level.shape[1]
+    allr = np.concatenate([sorted_level, queries]).astype(np.int64)
+    key = allr[:, 0]
+    for j in range(1, k):
+        key = np.unique(key, return_inverse=True)[1]
+        key = key * np.int64(ITEM_PAD) + allr[:, j]
+    level_keys = key[:m]
+    pos = np.searchsorted(level_keys, key[m:])
+    hit = pos < m
+    return hit & (level_keys[np.minimum(pos, m - 1)] == key[m:])
+
+
+def apriori_gen_matrix(level_mat: np.ndarray) -> np.ndarray:
+    """Array-native ``apriori_gen``: (C, k) sorted level matrix -> (C', k+1)
+    candidate matrix, rows in lexicographic order.
+
+    Join: rows sharing their (k-1)-prefix form contiguous groups in the
+    sorted matrix; every within-group pair (a < b) joins to ``row_a + last_b``.
+    Pairs are built vectorized by batching groups of equal size through one
+    ``np.triu_indices`` template. Prune: each of the k-1 subsets obtained by
+    dropping one of the first k-1 positions (the two parents are in the level
+    by construction) is membership-tested against the level via
+    ``_rows_member``'s searchsorted.
+    """
+    mat = np.asarray(level_mat, dtype=np.int32)
+    if mat.size == 0:
+        return np.zeros((0, (mat.shape[1] + 1) if mat.ndim == 2 else 0), np.int32)
+    c, k = mat.shape
+    new_group = np.empty((c,), bool)
+    new_group[0] = True
+    new_group[1:] = ~(mat[1:, : k - 1] == mat[:-1, : k - 1]).all(axis=1)
+    starts = np.flatnonzero(new_group)
+    sizes = np.diff(np.append(starts, c))
+
+    a_parts, b_parts = [], []
+    for g in np.unique(sizes):
+        if g < 2:
+            continue
+        s = starts[sizes == g]
+        ta, tb = np.triu_indices(int(g), 1)
+        a_parts.append((s[:, None] + ta[None, :]).ravel())
+        b_parts.append((s[:, None] + tb[None, :]).ravel())
+    if not a_parts:
+        return np.zeros((0, k + 1), np.int32)
+    a_idx = np.concatenate(a_parts)
+    b_idx = np.concatenate(b_parts)
+    cand = np.concatenate([mat[a_idx], mat[b_idx, -1:]], axis=1)  # (P, k+1)
+
+    keep = np.ones((cand.shape[0],), bool)
+    for drop in range(k - 1):  # dropping position k-1 or k gives a parent
+        subset = np.delete(cand, drop, axis=1)
+        keep &= _rows_member(mat, subset)
+    cand = cand[keep]
+    return cand[np.lexsort(cand.T[::-1])]
 
 
 def level_to_matrix(level: Sequence[Itemset], dtype=np.int32) -> np.ndarray:

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.engine import MapReduceEngine
-from repro.core.itemsets import Itemset, apriori_gen, level_to_matrix, sort_level
+from repro.core.itemsets import Itemset, level_to_matrix, sort_level
 from repro.core.stores import encode_db
 
 
@@ -105,8 +105,10 @@ class FrequentItemsetMiner:
         engine.place(enc)
 
         combiner = strategies.get(self.strategy)
+        # Levels enter (and stay in) matrix form inside the strategy loop;
+        # tuples only reappear in the yielded result dicts.
         for stats, freq_dense in combiner(
-            engine, sort_level(level), min_count, start_k=k, max_k=self.max_k
+            engine, level_to_matrix(level), min_count, start_k=k, max_k=self.max_k
         ):
             levels.append(stats)
             for s, c in freq_dense.items():

@@ -10,33 +10,44 @@ hash-table trie    ``perfect_hash``       one O(1) gather into the transaction b
 trie               ``sorted_prefix``      binary search in the sorted transaction
 hash tree          ``hash_bucket``        bucket probe + linear scan over the bucket
 (beyond paper)     ``bitmap``             dense (T·Cᵀ == k) matmul on the MXU
+(beyond paper)     ``packed_bitmap``      popcount(t & c) == k over 32-items/word
 =================  =====================  =========================================
 
 All stores implement ``count_block(enc_block, cand) -> int32[C]`` as a pure JAX
 function over a block of encoded transactions, and produce identical counts.
+Candidate tensors are built *on device* by each store's jit-safe
+``encode_candidates(cand, f_pad=...)`` from the small (C, k) int32 matrix —
+the only per-wave host-to-device transfer.
 """
 
-from repro.core.stores.base import EncodedDB, encode_db, pad_candidates, ITEM_PAD
+from repro.core.stores.base import (
+    EncodedDB, encode_db, pack_bitmap, pad_candidates, ITEM_PAD, WORD_BITS,
+)
 from repro.core.stores.perfect_hash import PerfectHashStore
 from repro.core.stores.sorted_prefix import SortedPrefixStore
 from repro.core.stores.hash_bucket import HashBucketStore
 from repro.core.stores.bitmap import BitmapMXUStore
+from repro.core.stores.packed_bitmap import PackedBitmapStore
 
 ARRAY_STORES = {
     "perfect_hash": PerfectHashStore,
     "sorted_prefix": SortedPrefixStore,
     "hash_bucket": HashBucketStore,
     "bitmap": BitmapMXUStore,
+    "packed_bitmap": PackedBitmapStore,
 }
 
 __all__ = [
     "EncodedDB",
     "encode_db",
+    "pack_bitmap",
     "pad_candidates",
     "ITEM_PAD",
+    "WORD_BITS",
     "PerfectHashStore",
     "SortedPrefixStore",
     "HashBucketStore",
     "BitmapMXUStore",
+    "PackedBitmapStore",
     "ARRAY_STORES",
 ]

@@ -11,6 +11,19 @@ import numpy as np
 ITEM_PAD = np.int32(2**30)
 
 
+WORD_BITS = 32  # items per packed uint32 word
+
+
+def pack_bitmap(bitmap: np.ndarray) -> np.ndarray:
+    """(N, F_pad) uint8 multi-hot -> (N, F_pad/32) uint32, bit b of word w is
+    column ``32*w + b``. F_pad is a multiple of 128, so it always divides 32."""
+    n, f = bitmap.shape
+    assert f % WORD_BITS == 0, f"F_pad={f} must be a multiple of {WORD_BITS}"
+    lanes = bitmap.reshape(n, f // WORD_BITS, WORD_BITS).astype(np.uint32)
+    weights = np.uint32(1) << np.arange(WORD_BITS, dtype=np.uint32)
+    return np.bitwise_or.reduce(lanes * weights, axis=2)
+
+
 @dataclasses.dataclass
 class EncodedDB:
     """Device encoding of a transaction database over F (frequent) items.
@@ -22,12 +35,15 @@ class EncodedDB:
     padded:   (N, L) int32, each row sorted ascending, padded with ITEM_PAD.
     bitmap:   (N, F_pad) uint8 multi-hot; F_pad a multiple of 128 and > F, so
               column F_pad - 1 is guaranteed all-zero (used by candidate pads).
+    packed:   (N, F_pad/32) uint32 view of ``bitmap``, 32 item columns per
+              word — built lazily and cached (1 bit per column instead of 8).
     n_items:  F, the number of real (frequent) item columns.
     """
 
     padded: np.ndarray
     bitmap: np.ndarray
     n_items: int
+    _packed: np.ndarray = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def n_transactions(self) -> int:
@@ -37,6 +53,16 @@ class EncodedDB:
     def f_pad(self) -> int:
         return self.bitmap.shape[1]
 
+    @property
+    def n_words(self) -> int:
+        return self.f_pad // WORD_BITS
+
+    @property
+    def packed(self) -> np.ndarray:
+        if self._packed is None:
+            self._packed = pack_bitmap(self.bitmap)
+        return self._packed
+
     def pad_transactions_to(self, n: int) -> "EncodedDB":
         """Pad N up to ``n`` with empty transactions (match nothing)."""
         if n == self.n_transactions:
@@ -44,11 +70,15 @@ class EncodedDB:
         extra = n - self.n_transactions
         pad_rows = np.full((extra, self.padded.shape[1]), ITEM_PAD, np.int32)
         pad_bits = np.zeros((extra, self.f_pad), np.uint8)
-        return EncodedDB(
+        out = EncodedDB(
             padded=np.concatenate([self.padded, pad_rows]),
             bitmap=np.concatenate([self.bitmap, pad_bits]),
             n_items=self.n_items,
         )
+        if self._packed is not None:  # extend the cached packed view in place
+            pad_words = np.zeros((extra, self.n_words), np.uint32)
+            out._packed = np.concatenate([self._packed, pad_words])
+        return out
 
 
 def encode_db(

@@ -18,7 +18,12 @@ from repro.core.stores.base import EncodedDB
 
 
 def candidates_to_khot(cand: np.ndarray, f_pad: int) -> tuple[np.ndarray, np.ndarray]:
-    """(C, k) item matrix -> (C, F_pad) k-hot f32 rows + int32 k vector."""
+    """(C, k) item matrix -> (C, F_pad) k-hot f32 rows + int32 k vector.
+
+    Host-side reference encoder; the engine's per-wave hot path uses the
+    device-side ``encode_candidates`` instead so only (C, k) int32 crosses
+    the host boundary.
+    """
     c, k = cand.shape
     khot = np.zeros((c, f_pad), dtype=np.float32)
     rows = np.repeat(np.arange(c), k)
@@ -37,9 +42,12 @@ class BitmapMXUStore:
         return {"bitmap": enc.bitmap}
 
     @staticmethod
-    def candidate_inputs(cand: np.ndarray, enc: EncodedDB) -> dict:
-        khot, kvec = candidates_to_khot(cand, enc.f_pad)
-        return {"khot": khot, "kvec": kvec}
+    def encode_candidates(cand: jnp.ndarray, *, f_pad: int) -> dict:
+        """Device-side k-hot scatter from the (C, k) item matrix (jit-safe)."""
+        c, k = cand.shape
+        rows = jnp.repeat(jnp.arange(c), k)
+        khot = jnp.zeros((c, f_pad), jnp.float32).at[rows, cand.reshape(-1)].add(1.0)
+        return {"khot": khot, "kvec": jnp.full((c,), k, jnp.int32)}
 
     @classmethod
     def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:

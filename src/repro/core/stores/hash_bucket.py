@@ -28,8 +28,8 @@ class HashBucketStore:
         return {"bitmap": enc.bitmap, "t_hash": t_hash.astype(np.int32)}
 
     @classmethod
-    def candidate_inputs(cls, cand: np.ndarray, enc: EncodedDB) -> dict:
-        bucket = (cand[:, 0] % cls.child_max_size).astype(np.int32)
+    def encode_candidates(cls, cand: jnp.ndarray, *, f_pad: int) -> dict:
+        bucket = (cand[:, 0] % cls.child_max_size).astype(jnp.int32)
         return {"cand": cand, "cand_bucket": bucket}
 
     @classmethod

@@ -23,7 +23,7 @@ class SortedPrefixStore:
         return {"padded": enc.padded}
 
     @staticmethod
-    def candidate_inputs(cand: np.ndarray, enc: EncodedDB) -> dict:
+    def encode_candidates(cand: jnp.ndarray, *, f_pad: int) -> dict:
         return {"cand": cand}
 
     @staticmethod

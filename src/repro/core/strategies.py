@@ -8,6 +8,12 @@ is hit. Combined waves generate C_{k+1} from *candidates* C_k (speculative —
 pruning checks run against C_k, not L_k), exactly the FPC/DPC trade-off: fewer
 jobs vs. more (possibly useless) candidates counted.
 
+Levels travel as (C, k) int32 matrices end-to-end: ``apriori_gen_matrix``
+joins/prunes on the sorted matrix and the engine counts it directly, so the
+generation -> counting hot path never round-trips through Python tuples.
+Tuples appear only in the yielded result dicts (the driver's checkpoint and
+reporting format).
+
 Each strategy is a generator yielding ``(LevelStats, {itemset: count})`` per
 counting job, so the driver can checkpoint after every job.
 """
@@ -15,37 +21,56 @@ counting job, so the driver can checkpoint after every job.
 from __future__ import annotations
 
 import time
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, List
 
 import numpy as np
 
-from repro.core.itemsets import Itemset, apriori_gen, level_to_matrix, sort_level
+from repro.core.itemsets import (
+    Itemset,
+    apriori_gen_matrix,
+    level_to_matrix,
+)
 
 
-def _count_level(engine, cands: List[Itemset], min_count: int):
-    mat = level_to_matrix(cands)
-    counts = engine.count_candidates(mat)
-    frequent = {
-        tuple(int(x) for x in mat[i]): int(counts[i])
-        for i in range(mat.shape[0])
-        if counts[i] >= min_count
+def _as_matrix(level) -> np.ndarray:
+    """Accept a (C, k) matrix or a sequence of itemset tuples."""
+    if isinstance(level, np.ndarray):
+        return level.astype(np.int32, copy=False)
+    return level_to_matrix(level)
+
+
+def _count_matrix(engine, cand_mat: np.ndarray, min_count: int):
+    """Count one candidate matrix; return the surviving rows and counts.
+
+    The surviving matrix keeps candidate (lexicographic) order, so it is a
+    canonical level matrix ready for the next ``apriori_gen_matrix``.
+    """
+    counts = engine.count_candidates(cand_mat)
+    keep = counts >= min_count
+    return cand_mat[keep], counts[keep]
+
+
+def _to_dict(mat: np.ndarray, counts: np.ndarray) -> Dict[Itemset, int]:
+    return {
+        tuple(int(x) for x in mat[i]): int(counts[i]) for i in range(mat.shape[0])
     }
-    return frequent
 
 
-def spc(engine, level: Sequence[Itemset], min_count: int, start_k: int, max_k: int):
+def spc(engine, level, min_count: int, start_k: int, max_k: int):
     """One job per level (the paper's Algorithm 1)."""
     from repro.core.miner import LevelStats
 
+    mat = _as_matrix(level)
     k = start_k
-    while level and k <= max_k:
+    while mat.size and k <= max_k:
         t0 = time.perf_counter()
-        cands = apriori_gen(level)
-        if not cands:
+        cand = apriori_gen_matrix(mat)
+        if cand.size == 0:
             return
-        frequent = _count_level(engine, cands, min_count)
-        yield LevelStats(k, len(cands), len(frequent), time.perf_counter() - t0), frequent
-        level = sort_level(frequent.keys())
+        mat, counts = _count_matrix(engine, cand, min_count)
+        frequent = _to_dict(mat, counts)
+        yield LevelStats(k, cand.shape[0], mat.shape[0],
+                         time.perf_counter() - t0), frequent
         k += 1
 
 
@@ -53,34 +78,35 @@ def _combined(engine, level, min_count, start_k, max_k, should_extend):
     """Shared FPC/DPC body: one job counts a wave of candidate levels."""
     from repro.core.miner import LevelStats
 
+    mat = _as_matrix(level)
     k = start_k
-    while level and k <= max_k:
+    while mat.size and k <= max_k:
         t0 = time.perf_counter()
-        waves: List[List[Itemset]] = []
-        cands = apriori_gen(level)
-        while cands:
-            waves.append(cands)
+        waves: List[np.ndarray] = []
+        cand = apriori_gen_matrix(mat)
+        while cand.size:
+            waves.append(cand)
             if k + len(waves) - 1 >= max_k or not should_extend(waves):
                 break
-            cands = apriori_gen(cands)  # speculative: join/prune against C_k
+            cand = apriori_gen_matrix(cand)  # speculative: join/prune against C_k
         if not waves:
             return
-        all_cands = [c for wave in waves for c in wave]
+        n_cands = sum(w.shape[0] for w in waves)
         # Mixed k in one job: count each wave as its own matrix (one device
         # dispatch per k, one logical job) and merge.
         frequent: Dict[Itemset, int] = {}
         for wave in waves:
-            frequent.update(_count_level(engine, wave, min_count))
+            frequent.update(_to_dict(*_count_matrix(engine, wave, min_count)))
         # Enforce downward closure across the combined wave: a (k+1)-itemset
         # counted speculatively is only kept if all its k-subsets survived.
         frequent = _closure_filter(frequent)
         stats = LevelStats(
-            k + len(waves) - 1, len(all_cands), len(frequent),
+            k + len(waves) - 1, n_cands, len(frequent),
             time.perf_counter() - t0,
         )
         yield stats, frequent
         top_k = max((len(s) for s in frequent), default=0)
-        level = sort_level(s for s in frequent if len(s) == top_k)
+        mat = level_to_matrix([s for s in frequent if len(s) == top_k])
         k = top_k + 1 if frequent else k + len(waves)
 
 
@@ -111,7 +137,7 @@ def dpc(engine, level, min_count, start_k, max_k, budget: int = 50_000):
     """Extend the wave while the combined candidate count stays in budget."""
     return _combined(
         engine, level, min_count, start_k, max_k,
-        should_extend=lambda waves: sum(len(w) for w in waves) < budget,
+        should_extend=lambda waves: sum(w.shape[0] for w in waves) < budget,
     )
 
 

@@ -1,4 +1,12 @@
-from repro.kernels.support_count.ops import support_count
-from repro.kernels.support_count.ref import support_count_ref
+from repro.kernels.support_count.ops import packed_support_count, support_count
+from repro.kernels.support_count.ref import (
+    packed_support_count_ref,
+    support_count_ref,
+)
 
-__all__ = ["support_count", "support_count_ref"]
+__all__ = [
+    "support_count",
+    "support_count_ref",
+    "packed_support_count",
+    "packed_support_count_ref",
+]

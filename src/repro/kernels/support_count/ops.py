@@ -1,5 +1,5 @@
-"""jit'd public wrapper for the support-count kernel: pads inputs to block
-multiples, dispatches to the Pallas kernel (interpret mode on CPU), trims pads.
+"""jit'd public wrappers for the support-count kernels: pad inputs to block
+multiples, dispatch to the Pallas kernel (interpret mode on CPU), trim pads.
 """
 
 from __future__ import annotations
@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.support_count.kernel import support_count_pallas
+from repro.kernels.support_count.packed import packed_support_count_pallas
 
 
 def _round_up(x: int, m: int) -> int:
@@ -63,4 +64,55 @@ def support_count(
     return _padded_call(
         bitmap, khot, kvec,
         block_n=block_n, block_c=block_c, block_f=block_f, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_c", "block_w", "interpret")
+)
+def _packed_padded_call(packed, cpacked, kvec, *, block_n, block_c, block_w,
+                        interpret):
+    n, w = packed.shape
+    c = cpacked.shape[0]
+    np_, cp, wp = _round_up(n, block_n), _round_up(c, block_c), _round_up(w, block_w)
+    packed = jnp.pad(packed, ((0, np_ - n), (0, wp - w)))
+    cpacked = jnp.pad(cpacked, ((0, cp - c), (0, wp - w)))
+    # Padded candidates get k=-1: a non-negative popcount never equals -1.
+    kvec = jnp.pad(kvec, (0, cp - c), constant_values=-1)
+    out = packed_support_count_pallas(
+        packed, cpacked, kvec,
+        block_n=block_n, block_c=block_c, block_w=block_w, interpret=interpret,
+    )
+    return out[:c]
+
+
+def packed_support_count(
+    packed,
+    cpacked,
+    kvec,
+    *,
+    block_n: int = 256,
+    block_c: int = 256,
+    block_w: int = 32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Count, for every packed candidate row of ``cpacked``, the number of
+    ``packed`` transaction rows whose AND-popcount reaches k. See packed.py
+    for the blocked design.
+
+    interpret=None auto-selects interpret mode off-TPU so the kernel body is
+    validated on CPU; on TPU it compiles to Mosaic.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    packed = jnp.asarray(packed, dtype=jnp.uint32)
+    cpacked = jnp.asarray(cpacked, dtype=jnp.uint32)
+    kvec = jnp.asarray(kvec, dtype=jnp.int32)
+    # Clamp blocks for small problems (keeps the grid non-degenerate).
+    block_n = min(block_n, _round_up(packed.shape[0], 8))
+    block_c = min(block_c, _round_up(cpacked.shape[0], 128))
+    block_w = min(block_w, _round_up(packed.shape[1], 8))
+    return _packed_padded_call(
+        packed, cpacked, kvec,
+        block_n=block_n, block_c=block_c, block_w=block_w, interpret=interpret,
     )

@@ -1,7 +1,8 @@
-"""Pure-jnp oracle for the support-count kernel."""
+"""Pure-jnp oracles for the support-count kernels."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -16,4 +17,24 @@ def support_count_ref(
         preferred_element_type=jnp.float32,
     )
     matched = dots == kvec.astype(jnp.float32)[None, :]
+    return jnp.sum(matched.astype(jnp.int32), axis=0)
+
+
+def packed_support_count_ref(
+    packed: jnp.ndarray,   # (N, W) uint32 packed transaction rows
+    cpacked: jnp.ndarray,  # (C, W) uint32 packed k-hot candidate rows
+    kvec: jnp.ndarray,     # (C,) int32 number of items per candidate
+) -> jnp.ndarray:
+    """int32[C]: for each packed candidate, #transactions containing it.
+
+    Word-unrolled AND+popcount — the identical arithmetic the packed Pallas
+    kernel executes, without materializing the (N, C, W) broadcast.
+    """
+    packed = jnp.asarray(packed, jnp.uint32)
+    cpacked = jnp.asarray(cpacked, jnp.uint32)
+    acc = jnp.zeros((packed.shape[0], cpacked.shape[0]), jnp.int32)
+    for w in range(packed.shape[1]):
+        shared = jax.lax.population_count(packed[:, w, None] & cpacked[None, :, w])
+        acc = acc + shared.astype(jnp.int32)
+    matched = acc == kvec.astype(jnp.int32)[None, :]
     return jnp.sum(matched.astype(jnp.int32), axis=0)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.distributed import checkpoint as ckpt
+from repro.launch.mesh import compat_make_mesh
 from repro.distributed.compression import compress_grads, ef_abstract
 from repro.distributed.sharding import default_rules
 from repro.launch.hlo_stats import collective_bytes, roofline_terms
@@ -55,8 +56,7 @@ def test_checkpoint_elastic_resharding(tmp_path):
     d = str(tmp_path)
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     ckpt.save(d, 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("data",))
     sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))}
     restored, _, _ = ckpt.restore(d, tree, shardings=sh)
     assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)

@@ -6,6 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_reduced

@@ -2,9 +2,11 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import MapReduceEngine
+from repro.launch.mesh import compat_make_mesh
 from repro.core.itemsets import brute_force_counts, level_to_matrix
 from repro.core.stores import ARRAY_STORES, encode_db, pad_candidates
 
@@ -69,8 +71,7 @@ def test_pad_candidates_never_match():
 def test_engine_on_mesh():
     import jax
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("data",))
     db = [[0, 1, 2], [0, 2], [1, 2]] * 7
     engine = MapReduceEngine(store="bitmap", mesh=mesh)
     engine.place(encode_db(db, n_items=3))

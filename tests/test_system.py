@@ -11,6 +11,7 @@ from repro.core import (
     run_mapreduce_apriori,
 )
 from repro.data import paper_datasets, quest_generator
+from repro.launch.mesh import compat_make_mesh
 
 
 @pytest.fixture(scope="module")
@@ -55,8 +56,7 @@ def test_miner_checkpoint_restart(tmp_path, small_db, oracle):
 
 
 def test_miner_on_mesh(small_db, oracle):
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("data",))
     res = FrequentItemsetMiner(min_support=0.05, mesh=mesh).mine(small_db)
     assert res.itemsets == oracle
 
