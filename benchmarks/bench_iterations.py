@@ -20,6 +20,9 @@ def run() -> list:
             out.append(row(
                 f"table1/{structure}/iter={it.k}",
                 it.parallel_seconds * 1e6,
-                f"cands={it.n_candidates};freq={it.n_frequent}",
+                f"cands={it.n_candidates};freq={it.n_frequent};"
+                f"gen_ms={it.gen_seconds * 1e3:.1f};"
+                f"build_ms={it.build_seconds * 1e3:.1f};"
+                f"count_ms={it.count_seconds * 1e3:.1f}",
             ))
     return out

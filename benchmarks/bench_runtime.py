@@ -1,0 +1,87 @@
+"""Unified runtime: sync vs async double-buffered wave dispatch, and Job1
+host-loop vs device histogram — the two hot-path moves of the runtime
+re-layering, with bit-identical-results checks inline."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.runtime import JaxRunner, MapReduceEngine
+from repro.core.stores import encode_db
+from repro.data import paper_datasets
+
+from benchmarks.common import SCALE, c2_wave, row, timed
+
+WAVE_STORE = "packed_bitmap"
+CAND_BLOCK = 512  # small chunks so one C2 wave streams as many dispatches
+
+
+def run() -> list:
+    db = paper_datasets(scale=SCALE)["T10I4D100K"]
+    out = []
+
+    # -- Job1: host per-transaction loop vs device histogram job -----------
+    runner = JaxRunner(store=WAVE_STORE)
+    runner.ingest(db)
+    n_items = runner.n_raw_items
+    host_hist, host_s = timed(MapReduceEngine.count_items, db, n_items,
+                              repeat=3)
+    dev_hist, dev_s = timed(
+        runner.engine.count_items_device, runner._padded_raw, n_items,
+        repeat=3)
+    np.testing.assert_array_equal(host_hist, dev_hist)
+    out.append(row("runtime/job1_host_loop", host_s * 1e6,
+                   f"N={len(db)};n_items={n_items}"))
+    out.append(row("runtime/job1_device", dev_s * 1e6,
+                   f"N={len(db)};n_items={n_items};"
+                   f"speedup_vs_host={host_s / dev_s:.2f}x"))
+
+    # -- wave dispatch: sync (inflight=0) vs double-buffered ----------------
+    dbd, n_dense, mat = c2_wave(db)
+    enc = encode_db(dbd, n_items=n_dense)
+
+    depths = [0, 1, 2, 4]
+    engines = {}
+    ref = None
+    for inflight in depths:
+        engine = MapReduceEngine(store=WAVE_STORE, cand_block=CAND_BLOCK,
+                                 inflight=inflight)
+        engine.place(enc)
+        counts = engine.count_candidates(mat)  # compile + correctness
+        if ref is None:
+            ref = counts
+        np.testing.assert_array_equal(counts, ref)  # bit-identical pipeline
+        engines[inflight] = engine
+    # Interleave measurement rounds across configs so single-core load drift
+    # hits every depth equally instead of biasing whichever ran last.
+    secs = {d: float("inf") for d in depths}
+    for _ in range(9):
+        for inflight in depths:
+            _, sec = timed(engines[inflight].count_candidates, mat)
+            secs[inflight] = min(secs[inflight], sec)
+    for inflight in depths:
+        label = "sync" if inflight == 0 else f"inflight{inflight}"
+        meta = (f"C={mat.shape[0]};chunks={-(-mat.shape[0] // CAND_BLOCK)};"
+                f"N={enc.n_transactions}")
+        if inflight > 0:
+            meta += f";speedup_vs_sync={secs[0] / secs[inflight]:.2f}x"
+        out.append(row(f"runtime/wave_{label}", secs[inflight] * 1e6, meta))
+
+    # -- end-to-end: pipelined SPC miner, sync vs double-buffered -----------
+    ref_sets = None
+    for inflight, label in [(0, "sync"), (2, "inflight2")]:
+        runner = JaxRunner(store=WAVE_STORE, cand_block=CAND_BLOCK,
+                           inflight=inflight)
+        from repro.core import FrequentItemsetMiner
+
+        miner = FrequentItemsetMiner(min_support=0.02, runner=runner, max_k=8)
+        res, sec = timed(miner.mine, db)
+        if ref_sets is None:
+            ref_sets = res.itemsets
+        assert res.itemsets == ref_sets
+        gen = sum(l.gen_seconds for l in res.levels)
+        cnt = sum(l.count_seconds for l in res.levels)
+        out.append(row(f"runtime/mine_spc_{label}", sec * 1e6,
+                       f"frequent={len(res.itemsets)};jobs={len(res.levels)};"
+                       f"gen_ms={gen * 1e3:.1f};count_ms={cnt * 1e3:.1f}"))
+    return out

@@ -12,28 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import MapReduceEngine
-from repro.core.itemsets import apriori_gen, level_to_matrix, sort_level
 from repro.core.stores import ARRAY_STORES, encode_db
 from repro.data import paper_datasets
 
-from benchmarks.common import SCALE, row, timed
+from benchmarks.common import SCALE, c2_wave, row, timed
 
 
 def run() -> list:
     db = paper_datasets(scale=SCALE)["T10I4D100K"]
-    items = sorted({i for t in db for i in t})
-    remap = {it: i for i, it in enumerate(items)}
-    db_dense = [[remap[i] for i in t] for t in db]
-    enc = encode_db(db_dense, n_items=len(items))
-
     # one realistic candidate wave: frequent pairs from frequent items
-    from collections import Counter
-
-    c1 = Counter(i for t in db_dense for i in t)
-    min_count = max(2, int(0.02 * len(db)))
-    l1 = sort_level((i,) for i, c in c1.items() if c >= min_count)
-    c2 = apriori_gen(l1)
-    mat = level_to_matrix(c2)
+    db_dense, n_items, mat = c2_wave(db)
+    enc = encode_db(db_dense, n_items=n_items)
 
     out = []
     counts_ref = None

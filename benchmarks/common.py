@@ -22,3 +22,23 @@ def timed(fn: Callable, *args, repeat: int = 1, **kwargs):
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def c2_wave(db, min_frac: float = 0.02):
+    """One realistic C2 counting wave: dense-remap ``db``, take the frequent
+    items at ``min_frac`` support, and join them into candidate pairs.
+
+    Returns ``(db_dense, n_items, (C, 2) candidate matrix)`` — the shared
+    setup of every suite that benchmarks a single counting wave.
+    """
+    from collections import Counter
+
+    from repro.core.itemsets import apriori_gen, level_to_matrix, sort_level
+
+    items = sorted({i for t in db for i in t})
+    remap = {it: i for i, it in enumerate(items)}
+    db_dense = [[remap[i] for i in t] for t in db]
+    c1 = Counter(i for t in db_dense for i in t)
+    min_count = max(2, int(min_frac * len(db)))
+    l1 = sort_level((i,) for i, c in c1.items() if c >= min_count)
+    return db_dense, len(items), level_to_matrix(apriori_gen(l1))

@@ -47,6 +47,7 @@ def main() -> None:
         bench_iterations,
         bench_mappers,
         bench_min_support,
+        bench_runtime,
         bench_stores_jax,
         bench_strategies,
     )
@@ -57,6 +58,7 @@ def main() -> None:
         "table2_fig5_mappers": bench_mappers.run,
         "stores_jax": bench_stores_jax.run,
         "strategies": bench_strategies.run,
+        "runtime": bench_runtime.run,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -21,6 +21,8 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--store", default="bitmap", choices=list(ARRAY_STORES))
+    ap.add_argument("--inflight", type=int, default=1,
+                    help="async wave-dispatch depth (0 = fully synchronous)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_mine_t10")
     args = ap.parse_args()
 
@@ -31,7 +33,7 @@ def main() -> None:
 
     miner = FrequentItemsetMiner(
         min_support=args.min_support, store=args.store,
-        checkpoint_dir=args.ckpt_dir,
+        inflight=args.inflight, checkpoint_dir=args.ckpt_dir,
     )
     t0 = time.time()
     res = miner.mine(db)

@@ -3,9 +3,7 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import FrequentItemsetMiner, run_mapreduce_apriori
+from repro.core import FrequentItemsetMiner, JaxRunner, run_mapreduce_apriori
 from repro.data import quest_generator
 
 
@@ -25,17 +23,20 @@ def main() -> None:
         print(f"{structure:16s}: {len(res.itemsets):4d} frequent itemsets, "
               f"parallel time {res.parallel_seconds * 1e3:7.1f} ms")
 
-    # 2. The TPU-native track: MapReduce-on-JAX with array-layout stores.
+    # 2. The TPU-native track: the same driver over a JAX runner per
+    #    array-layout store (device-side Job1, double-buffered wave dispatch).
     print("\n-- JAX track (array-layout candidate stores) --")
     reference = None
     for store in ["perfect_hash", "sorted_prefix", "hash_bucket", "bitmap",
                   "packed_bitmap"]:
-        res = FrequentItemsetMiner(min_support=min_support, store=store).mine(db)
-        reference = reference or res.itemsets
+        runner = JaxRunner(store=store, inflight=1)
+        res = FrequentItemsetMiner(min_support=min_support, runner=runner).mine(db)
+        if reference is None:
+            reference = res.itemsets
         assert res.itemsets == reference
         total_s = sum(l.seconds for l in res.levels)
         print(f"{store:16s}: {len(res.itemsets):4d} frequent itemsets, "
-              f"{total_s * 1e3:7.1f} ms over {len(res.levels)} levels")
+              f"{total_s * 1e3:7.1f} ms over {len(res.levels)} jobs")
 
     top = sorted(reference.items(), key=lambda kv: (-len(kv[0]), -kv[1]))[:5]
     print("\nlargest frequent itemsets:")

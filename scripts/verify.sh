@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Single entry point for builders: tier-1 tests + one fast counting-wave
-# benchmark smoke (packed vs bitmap on a down-scaled T10 twin).
+# Single entry point for builders: tier-1 tests + fast benchmark smokes —
+# one counting-wave suite (packed vs bitmap on a down-scaled T10 twin) and
+# the runtime suite (sync vs double-buffered dispatch, Job1 host vs device),
+# plus a cross-backend runner-parity smoke.
 #
 #   ./scripts/verify.sh
 set -euo pipefail
@@ -11,7 +13,33 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== smoke: runner parity (sim vs jax vs sharded) =="
+# Independent of the pytest fixtures above (different seed/params), and far
+# cheaper than re-running the full parity matrix the suite just covered.
+python - <<'PY'
+import numpy as np
+from repro.core import (FrequentItemsetMiner, JaxRunner, ShardedRunner,
+                        SimRunner, brute_force_frequent)
+from repro.data import quest_generator
+from repro.launch.mesh import compat_make_mesh
+
+db = quest_generator(n_transactions=150, avg_transaction_len=6, n_items=40,
+                     n_patterns=25, seed=11)
+oracle = brute_force_frequent(db, int(np.ceil(0.06 * len(db))))
+for runner in [
+    SimRunner(structure="hash_tree", n_mappers=4),
+    JaxRunner(store="packed_bitmap"),
+    ShardedRunner(store="perfect_hash", mesh=compat_make_mesh((1,), ("data",))),
+]:
+    res = FrequentItemsetMiner(min_support=0.06, runner=runner).mine(db)
+    assert res.itemsets == oracle, runner.describe()
+print("runner parity smoke OK (sim == jax == sharded == brute force)")
+PY
+
 echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
+
+echo "== smoke: runtime dispatch + Job1 (BENCH_SCALE=0.01) =="
+BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run runtime
 
 echo "verify OK"

@@ -1,14 +1,34 @@
-"""The paper's contribution: MapReduce Apriori with pluggable candidate stores."""
+"""The paper's contribution: MapReduce Apriori with pluggable candidate stores.
+
+The execution layer is the unified job runtime (``repro.core.runtime``):
+drivers (``FrequentItemsetMiner``, ``run_mapreduce_apriori``) submit jobs to
+pluggable runners — ``SimRunner`` (the paper's Hadoop cost model),
+``JaxRunner`` (single device) and ``ShardedRunner`` (mesh + shard_map) —
+which all report through one per-job ``JobProfile`` schema.
+"""
 
 from repro.core.miner import FrequentItemsetMiner, MiningResult
-from repro.core.engine import MapReduceEngine
+from repro.core.runtime import (
+    CountJob,
+    JaxRunner,
+    JobProfile,
+    MapReduceEngine,
+    ShardedRunner,
+    SimRunner,
+)
 from repro.core.itemsets import apriori_gen, brute_force_frequent
-from repro.core.hadoop_sim import run_mapreduce_apriori
+from repro.core.hadoop_sim import HadoopSimResult, run_mapreduce_apriori
 
 __all__ = [
     "FrequentItemsetMiner",
     "MiningResult",
     "MapReduceEngine",
+    "CountJob",
+    "JobProfile",
+    "SimRunner",
+    "JaxRunner",
+    "ShardedRunner",
+    "HadoopSimResult",
     "apriori_gen",
     "brute_force_frequent",
     "run_mapreduce_apriori",

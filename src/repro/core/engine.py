@@ -1,163 +1,10 @@
-"""MapReduce-on-JAX counting engine (Hadoop job ≙ one jit'd count step).
+"""Back-compat shim: the counting engine lives in the job runtime now.
 
-Mapper  = per-device count over its transaction shard (``data`` mesh axes);
-Combiner = the in-shard reduction inside ``count_block`` (sum over Nb);
-Shuffle+Reducer = ``lax.psum`` of the per-shard count vectors over the data
-axes, followed by host-side min-support thresholding.
-
-The transaction tensors are placed (sharded) once and reused across levels;
-each level's candidate arrays are replicated — the analogue of Hadoop's
-distributed cache shipping L_{k-1} to every mapper. A new candidate shape
-triggers one compile, the analogue of per-iteration job submission.
-
-Per wave, only the small (C, k) int32 candidate matrix crosses the host
-boundary; the store-specific candidate tensors (k-hot rows, packed words,
-bucket hashes) are built on device by the store's jit'd ``encode_candidates``.
+``MapReduceEngine`` (the jit/shard_map counting core, async double-buffered
+wave dispatch, device-side Job1) moved to ``repro.core.runtime.engine`` as
+the shared counting core of the JAX runners. Import from there in new code.
 """
 
-from __future__ import annotations
+from repro.core.runtime.engine import MapReduceEngine, PendingCounts
 
-import functools
-
-from typing import Optional, Tuple
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core.stores import ARRAY_STORES, EncodedDB, pad_candidates
-from repro.core.stores.base import ITEM_PAD
-
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:  # older jax: shard_map still lives under experimental
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-
-class MapReduceEngine:
-    def __init__(
-        self,
-        store: str = "perfect_hash",
-        mesh: Optional[Mesh] = None,
-        data_axes: Tuple[str, ...] = ("data",),
-        block_n: int = 2048,
-        cand_block: int = 32_768,
-    ) -> None:
-        if store not in ARRAY_STORES:
-            raise ValueError(f"unknown store {store!r}; pick from {list(ARRAY_STORES)}")
-        self.store = ARRAY_STORES[store]
-        self.store_name = store
-        self.mesh = mesh
-        self.data_axes = data_axes
-        self.block_n = block_n
-        self.cand_block = cand_block  # bounds per-dispatch candidate memory
-        self._trans_device = None
-        self._enc: Optional[EncodedDB] = None
-        self._count_jit = None
-        self._encode_jit = None
-
-    # -- placement ---------------------------------------------------------
-    @property
-    def n_data_shards(self) -> int:
-        if self.mesh is None:
-            return 1
-        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
-
-    def place(self, enc: EncodedDB) -> None:
-        """Shard transaction tensors over the data axes; keep them resident."""
-        shards = self.n_data_shards
-        n = enc.n_transactions
-        n_padded = ((n + shards - 1) // shards) * shards
-        enc = enc.pad_transactions_to(n_padded)
-        trans = self.store.transaction_inputs(enc)
-        if self.mesh is not None:
-            sharding = NamedSharding(self.mesh, P(self.data_axes))
-            trans = {k: jax.device_put(v, sharding) for k, v in trans.items()}
-        else:
-            trans = {k: jnp.asarray(v) for k, v in trans.items()}
-        self._trans_device = trans
-        self._enc = enc
-        self._count_jit = None  # built lazily (needs the candidate tree structure)
-        # Device-side candidate encoder: (C, k) int32 -> the store's candidate
-        # tensors, all built on device (jit caches per (C, k) shape).
-        self._encode_jit = jax.jit(
-            functools.partial(self.store.encode_candidates, f_pad=enc.f_pad)
-        )
-
-    def _blocked_count(self, trans: dict, cands: dict) -> jnp.ndarray:
-        """Mapper body: lax.map over Nb-blocks bounds peak (Nb, C) memory."""
-        n = next(iter(trans.values())).shape[0]
-        block_n = min(self.block_n, n)
-        n_blocks = max(1, n // block_n)
-        usable = n_blocks * block_n
-
-        def body(block):
-            return self.store.count_block(block, cands)
-
-        blocks = {k: v[:usable].reshape(n_blocks, block_n, *v.shape[1:]) for k, v in trans.items()}
-        partial = jax.lax.map(lambda b: body(b), blocks).sum(axis=0)
-        if usable < n:  # ragged tail block
-            tail = {k: v[usable:] for k, v in trans.items()}
-            partial = partial + body(tail)
-        return partial
-
-    def _build_count_fn(self, cands_example: dict):
-        if self.mesh is None:
-            return jax.jit(self._blocked_count)
-
-        data_spec = P(self.data_axes)
-
-        def sharded(trans, cands):
-            local = self._blocked_count(trans, cands)
-            return jax.lax.psum(local, self.data_axes)  # shuffle + reduce
-
-        fn = _shard_map(
-            sharded,
-            mesh=self.mesh,
-            in_specs=(
-                jax.tree.map(lambda _: data_spec, self._trans_device),
-                jax.tree.map(lambda _: P(), cands_example),
-            ),
-            out_specs=P(),
-        )
-        return jax.jit(fn)
-
-    # -- counting ------------------------------------------------------------
-    def count_candidates(self, cand: np.ndarray) -> np.ndarray:
-        """cand: (C, k) dense-id candidate matrix -> int64[C] global counts."""
-        assert self._enc is not None, "call place(enc) first"
-        if cand.size == 0:
-            return np.zeros((0,), np.int64)
-        if cand.shape[0] > self.cand_block:
-            # Large waves stream through in fixed-size candidate chunks (the
-            # same shapes each time, so one compile serves the whole wave).
-            parts = [
-                self.count_candidates(cand[i : i + self.cand_block])
-                for i in range(0, cand.shape[0], self.cand_block)
-            ]
-            return np.concatenate(parts)
-        c = cand.shape[0]
-        cand_p = pad_candidates(cand, self._enc.f_pad)
-        # Only the (C_pad, k) int32 matrix crosses the host boundary; the
-        # store's candidate tensors are expanded on device.
-        cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
-        if self.mesh is not None:
-            rep = NamedSharding(self.mesh, P())
-            cand_dev = jax.device_put(cand_dev, rep)
-        cands = self._encode_jit(cand_dev)
-        if self.mesh is not None:
-            cands = {k: jax.device_put(v, rep) for k, v in cands.items()}
-        if self._count_jit is None:
-            self._count_jit = self._build_count_fn(cands)
-        counts = np.asarray(jax.device_get(self._count_jit(self._trans_device, cands)))
-        return counts[:c].astype(np.int64)
-
-    # -- L1 (Job1: OneItemsetMapper + reducer) -------------------------------
-    @staticmethod
-    def count_items(transactions, n_items: int) -> np.ndarray:
-        """Histogram of raw item ids (frequent-1-itemset job)."""
-        if len(transactions) == 0:
-            return np.zeros((n_items,), np.int64)
-        flat = np.concatenate([np.unique(np.asarray(t, np.int64)) for t in transactions])
-        return np.bincount(flat, minlength=n_items).astype(np.int64)
+__all__ = ["MapReduceEngine", "PendingCounts"]

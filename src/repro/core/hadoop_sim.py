@@ -1,6 +1,8 @@
 """Faithful MapReduce Apriori driver over the paper's Java-equivalent stores.
 
-Executes the exact decomposition of Algorithms 1-4 — per-mapper candidate
+This module is now a thin front-end over the unified job runtime: the actual
+Job1/Job2 mapper loops live in ``core.runtime.runners.SimRunner``, which
+executes the exact decomposition of Algorithms 1-4 — per-mapper candidate
 generation + structure build + chunk counting (Algorithm 3), per-mapper
 combiner, then the global reducer — on CPU, with per-phase wall-clock
 measurement. Mappers are *executed sequentially but timed individually*; the
@@ -9,39 +11,24 @@ which is what an N-slot Hadoop cluster would see (this container has one core,
 so true concurrency is simulated; recorded in EXPERIMENTS.md). The saturation
 the paper observes (Fig 5) emerges mechanically: every mapper re-runs
 apriori-gen and rebuilds C_k, a fixed cost that parallelism cannot shrink.
+
+``run_mapreduce_apriori`` drives ``SimRunner`` through the same
+``FrequentItemsetMiner`` level loop (SPC strategy) as the JAX backends, so
+both tracks emit the same per-job ``JobProfile`` rows and can be compared
+head-to-head in ``benchmarks/``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Sequence
 
-import numpy as np
-
-from repro.core.itemsets import Itemset, apriori_gen, sort_level
+from repro.core.itemsets import Itemset
+from repro.core.runtime import JobProfile, SimRunner
 from repro.core.sequential import SEQUENTIAL_STORES
 
-
-@dataclasses.dataclass
-class IterationProfile:
-    k: int
-    n_candidates: int
-    n_frequent: int
-    mapper_seconds: List[float]      # one entry per mapper (gen+build+count+combine)
-    reduce_seconds: float
-    # Per-mapper phase breakdown (empty for Job1, which has no gen/build):
-    gen_seconds: List[float] = dataclasses.field(default_factory=list)
-    build_seconds: List[float] = dataclasses.field(default_factory=list)
-    count_seconds: List[float] = dataclasses.field(default_factory=list)
-
-    @property
-    def parallel_seconds(self) -> float:
-        return (max(self.mapper_seconds) if self.mapper_seconds else 0.0) + self.reduce_seconds
-
-    @property
-    def sequential_seconds(self) -> float:
-        return sum(self.mapper_seconds) + self.reduce_seconds
+# Back-compat alias: per-iteration stats are the unified JobProfile.
+IterationProfile = JobProfile
 
 
 @dataclasses.dataclass
@@ -49,7 +36,7 @@ class HadoopSimResult:
     structure: str
     n_mappers: int
     min_count: int
-    iterations: List[IterationProfile]
+    iterations: List[JobProfile]
     itemsets: Dict[Itemset, int]
 
     @property
@@ -59,34 +46,6 @@ class HadoopSimResult:
     @property
     def sequential_seconds(self) -> float:
         return sum(it.sequential_seconds for it in self.iterations)
-
-
-def _chunks(transactions: Sequence[Sequence[int]], n_mappers: int):
-    n = len(transactions)
-    size = (n + n_mappers - 1) // n_mappers
-    return [transactions[i : i + size] for i in range(0, n, size)]
-
-
-def _generate_and_build(store_cls, structure: str, level, child_max_size: int):
-    """One mapper's per-iteration fixed cost, phase-timed.
-
-    The hash tree consumes an externally generated C_k (Algorithm 4); the
-    trie family generates C_k from its own L_{k-1} structure. Both paths are
-    folded here so every Job2 mapper shares one code path and the profile can
-    attribute candidate-generation vs structure-build time separately.
-    """
-    t0 = time.perf_counter()
-    if structure == "hash_tree":
-        cands = apriori_gen(level)
-        gen_s = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        store = store_cls(cands, child_max_size=child_max_size)
-    else:
-        cands = store_cls(level).generate_candidates()
-        gen_s = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        store = store_cls(cands)
-    return cands, store, gen_s, time.perf_counter() - t1
 
 
 def run_mapreduce_apriori(
@@ -99,83 +58,14 @@ def run_mapreduce_apriori(
 ) -> HadoopSimResult:
     if structure not in SEQUENTIAL_STORES:
         raise ValueError(f"unknown structure {structure!r}")
-    store_cls = SEQUENTIAL_STORES[structure]
-    n = len(transactions)
-    min_count = max(1, int(np.ceil(min_support * n)))
-    chunks = _chunks(transactions, n_mappers)
-    iterations: List[IterationProfile] = []
-    itemsets: Dict[Itemset, int] = {}
+    from repro.core.miner import FrequentItemsetMiner
 
-    # --- Job1: OneItemsetMapper + combiner + reducer (Algorithm 2) ---------
-    mapper_times: List[float] = []
-    partials: List[Dict[Itemset, int]] = []
-    for chunk in chunks:
-        t0 = time.perf_counter()
-        local: Dict[Itemset, int] = {}
-        for t in chunk:
-            for item in set(t):
-                key = (int(item),)
-                local[key] = local.get(key, 0) + 1  # combiner folded in
-        mapper_times.append(time.perf_counter() - t0)
-        partials.append(local)
-    t0 = time.perf_counter()
-    merged: Dict[Itemset, int] = {}
-    for local in partials:
-        for s, c in local.items():
-            merged[s] = merged.get(s, 0) + c
-    frequent = {s: c for s, c in merged.items() if c >= min_count}
-    reduce_s = time.perf_counter() - t0
-    iterations.append(IterationProfile(1, len(merged), len(frequent), mapper_times, reduce_s))
-    itemsets.update(frequent)
-    level = sort_level(frequent.keys())
-
-    # --- Job2 per level k >= 2 (Algorithm 3) -------------------------------
-    k = 2
-    while level and k <= max_k:
-        mapper_times = []
-        gen_times: List[float] = []
-        build_times: List[float] = []
-        count_times: List[float] = []
-        partials = []
-        n_cands = 0
-        for chunk in chunks:
-            t0 = time.perf_counter()
-            # Every mapper re-generates C_k from the cached L_{k-1} and builds
-            # its own structure — the paper's per-mapper fixed cost.
-            cands, store, gen_s, build_s = _generate_and_build(
-                store_cls, structure, level, child_max_size
-            )
-            n_cands = len(cands)
-            t1 = time.perf_counter()
-            for t in chunk:
-                store.count_transaction(t)
-            local = {s: c for s, c in store.counts().items() if c > 0}
-            count_times.append(time.perf_counter() - t1)
-            gen_times.append(gen_s)
-            build_times.append(build_s)
-            mapper_times.append(time.perf_counter() - t0)
-            partials.append(local)
-        if n_cands == 0:
-            break
-        t0 = time.perf_counter()
-        merged = {}
-        for local in partials:
-            for s, c in local.items():
-                merged[s] = merged.get(s, 0) + c
-        frequent = {s: c for s, c in merged.items() if c >= min_count}
-        reduce_s = time.perf_counter() - t0
-        iterations.append(
-            IterationProfile(
-                k, n_cands, len(frequent), mapper_times, reduce_s,
-                gen_seconds=gen_times, build_seconds=build_times,
-                count_seconds=count_times,
-            )
-        )
-        itemsets.update(frequent)
-        level = sort_level(frequent.keys())
-        k += 1
-
+    runner = SimRunner(structure=structure, n_mappers=n_mappers,
+                       child_max_size=child_max_size)
+    res = FrequentItemsetMiner(
+        min_support=min_support, strategy="spc", max_k=max_k, runner=runner,
+    ).mine(transactions)
     return HadoopSimResult(
-        structure=structure, n_mappers=n_mappers, min_count=min_count,
-        iterations=iterations, itemsets=itemsets,
+        structure=structure, n_mappers=n_mappers, min_count=res.min_count,
+        iterations=res.levels, itemsets=res.itemsets,
     )

@@ -166,6 +166,28 @@ def apriori_gen_matrix(level_mat: np.ndarray) -> np.ndarray:
     return cand[np.lexsort(cand.T[::-1])]
 
 
+def filter_candidates_matrix(cand: np.ndarray, level_mat: np.ndarray) -> np.ndarray:
+    """Rows of the (C, k+1) candidate matrix whose *every* k-subset is a row
+    of the sorted (L, k) ``level_mat``.
+
+    With ``cand = apriori_gen_matrix(C_k)`` (a speculative superset generated
+    while L_k was still being counted) and ``level_mat = L_k``, this cuts the
+    superset back to exactly ``apriori_gen_matrix(L_k)``: a surviving row's
+    two parents are frequent and share a (k-1)-prefix (join), and its other
+    subsets are frequent (prune). Row order is preserved, so the result stays
+    lexicographically sorted — the pipelined SPC schedule is bit-identical to
+    the sequential one.
+    """
+    cand = np.asarray(cand, dtype=np.int32)
+    if cand.size == 0 or level_mat.size == 0:
+        return np.zeros((0, cand.shape[1] if cand.ndim == 2 else 0), np.int32)
+    k1 = cand.shape[1]
+    keep = np.ones((cand.shape[0],), bool)
+    for drop in range(k1):
+        keep &= _rows_member(level_mat, np.delete(cand, drop, axis=1))
+    return cand[keep]
+
+
 def level_to_matrix(level: Sequence[Itemset], dtype=np.int32) -> np.ndarray:
     """(C, k) matrix of a canonical level; rows in lexicographic order."""
     if not level:

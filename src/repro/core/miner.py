@@ -1,9 +1,17 @@
 """User-facing frequent-itemset miner: the paper's Driver (Algorithm 1).
 
-``FrequentItemsetMiner`` runs the level-wise loop — Job1 (1-itemsets) then one
-counting job per level — over any candidate store and pass-combining strategy,
-with checkpoint/restart so a preempted mining run resumes at the last completed
-level (the Hadoop analogue: completed jobs are never re-run).
+``FrequentItemsetMiner`` is a *thin* driver over the MapReduce job runtime
+(``core.runtime``): it ingests the database into a runner, submits Job1 (the
+1-itemset histogram job), dense-remaps over the frequent items, and iterates
+a pass-combining strategy — which owns the per-level jobs — checkpointing
+after every counting job so a preempted mining run resumes at the last
+completed level (the Hadoop analogue: completed jobs are never re-run).
+
+Any runner works: ``JaxRunner``/``ShardedRunner`` (array-layout stores, the
+TPU-native track) or ``SimRunner`` (the paper's Hadoop cost model over the
+Java-equivalent stores). All of them report per-job ``JobProfile`` rows
+through the same schema, so ``MiningResult.levels`` is directly comparable
+across backends.
 """
 
 from __future__ import annotations
@@ -11,22 +19,16 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import MapReduceEngine
 from repro.core.itemsets import Itemset, level_to_matrix, sort_level
-from repro.core.stores import encode_db
+from repro.core.runtime import BaseRunner, JobProfile, make_runner
+from repro.core.runtime import strategies
 
-
-@dataclasses.dataclass
-class LevelStats:
-    k: int
-    n_candidates: int
-    n_frequent: int
-    seconds: float
+# Back-compat alias: the old per-level stats type is the unified JobProfile.
+LevelStats = JobProfile
 
 
 @dataclasses.dataclass
@@ -34,7 +36,7 @@ class MiningResult:
     itemsets: Dict[Itemset, int]          # frequent itemset -> global support count
     min_count: int
     n_transactions: int
-    levels: List[LevelStats]
+    levels: List[JobProfile]
     item_map: np.ndarray                  # dense id -> original item id
 
     def frequent_at(self, k: int) -> Dict[Itemset, int]:
@@ -49,74 +51,96 @@ class FrequentItemsetMiner:
     def __init__(
         self,
         min_support: float = 0.01,
-        store: str = "perfect_hash",
+        store: Optional[str] = None,
         strategy: str = "spc",
         mesh=None,
-        data_axes: Tuple[str, ...] = ("data",),
+        data_axes: Optional[Tuple[str, ...]] = None,
         max_k: int = 16,
-        block_n: int = 2048,
+        block_n: Optional[int] = None,
+        inflight: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
+        runner: Optional[BaseRunner] = None,
     ) -> None:
+        if runner is not None and any(
+            v is not None for v in (store, mesh, data_axes, block_n, inflight)
+        ):
+            # An explicit runner owns its backend config; silently ignoring
+            # these would mine with a different setup than requested.
+            raise ValueError(
+                "pass backend config either through runner= or through "
+                "store/mesh/data_axes/block_n/inflight — not both"
+            )
         self.min_support = min_support
-        self.store = store
+        self.store = store if store is not None else "perfect_hash"
         self.strategy = strategy
         self.mesh = mesh
-        self.data_axes = data_axes
+        self.data_axes = data_axes if data_axes is not None else ("data",)
         self.max_k = max_k
-        self.block_n = block_n
+        self.block_n = block_n if block_n is not None else 2048
+        self.inflight = inflight if inflight is not None else 1
         self.checkpoint_dir = checkpoint_dir
+        self.runner = runner
+
+    def _make_runner(self) -> BaseRunner:
+        if self.runner is not None:
+            return self.runner
+        return make_runner(store=self.store, mesh=self.mesh,
+                           data_axes=self.data_axes, block_n=self.block_n,
+                           inflight=self.inflight)
+
+    def _config(self, runner: BaseRunner) -> dict:
+        """The run configuration stamped into checkpoints; a checkpoint from
+        a different config must never silently resume this run."""
+        return {"runner": runner.describe(), "strategy": self.strategy,
+                "max_k": self.max_k}
 
     # ------------------------------------------------------------------
     def mine(self, transactions: Sequence[Sequence[int]]) -> MiningResult:
-        from repro.core import strategies
-
         n = len(transactions)
         min_count = max(1, int(np.ceil(self.min_support * n)))
-        engine = MapReduceEngine(
-            store=self.store, mesh=self.mesh, data_axes=self.data_axes,
-            block_n=self.block_n,
-        )
+        runner = self._make_runner()
+        runner.ingest(transactions)
 
-        state = self._try_restore(n, min_count)
+        state = self._try_restore(n, min_count, self._config(runner))
         if state is None:
-            # Job1: frequent 1-itemsets over the raw item universe.
-            t0 = time.perf_counter()
-            max_item = max((max(t) for t in transactions if len(t)), default=0)
-            hist = engine.count_items(transactions, int(max_item) + 1)
+            # Job1: frequent 1-itemsets over the raw item universe — a
+            # histogram job on the runner (device-side for the JAX runners).
+            hist, prof1 = runner.job1()
             frequent_items = np.nonzero(hist >= min_count)[0]
             item_map = frequent_items.astype(np.int64)  # dense id -> original id
             itemsets: Dict[Itemset, int] = {
                 (int(it),): int(hist[it]) for it in frequent_items
             }
-            levels = [LevelStats(1, int(max_item) + 1, len(frequent_items),
-                                 time.perf_counter() - t0)]
-            level = [(int(np.searchsorted(item_map, it)),) for it in frequent_items]
+            prof1.n_frequent = len(frequent_items)
+            levels = [prof1]
+            # L1 in dense ids is simply 0..F-1, one item per row.
+            level_mat = np.arange(len(item_map), dtype=np.int32).reshape(-1, 1)
             k = 2
         else:
             itemsets, levels, level, k, item_map = state
+            level_mat = level_to_matrix(level)
 
         # Dense re-encode over frequent items only (Apriori property: no
-        # candidate may contain an infrequent item).
-        remap = {int(orig): dense for dense, orig in enumerate(item_map)}
-        dense_transactions = [
-            [remap[int(x)] for x in t if int(x) in remap] for t in transactions
-        ]
-        enc = encode_db(dense_transactions, n_items=len(item_map))
-        engine.place(enc)
+        # candidate may contain an infrequent item) and make the DB resident.
+        runner.place(item_map)
 
         combiner = strategies.get(self.strategy)
         # Levels enter (and stay in) matrix form inside the strategy loop;
         # tuples only reappear in the yielded result dicts.
         for stats, freq_dense in combiner(
-            engine, level_to_matrix(level), min_count, start_k=k, max_k=self.max_k
+            runner, level_mat, min_count, start_k=k, max_k=self.max_k
         ):
             levels.append(stats)
             for s, c in freq_dense.items():
                 orig = tuple(int(item_map[i]) for i in s)
                 itemsets[orig] = int(c)
-            level = sort_level(freq_dense.keys())
+            # A combined (FPC/DPC) wave yields mixed itemset sizes; the next
+            # level the strategy continues from — and the only thing a
+            # restore may rebuild into a (C, k) matrix — is the top-k slice.
+            top_k = max((len(s) for s in freq_dense), default=0)
+            level = sort_level(s for s in freq_dense if len(s) == top_k)
             self._checkpoint(itemsets, levels, level, stats.k + 1, item_map,
-                             n, min_count)
+                             n, min_count, self._config(runner))
 
         return MiningResult(
             itemsets=itemsets, min_count=min_count, n_transactions=n,
@@ -129,7 +153,8 @@ class FrequentItemsetMiner:
             return None
         return os.path.join(self.checkpoint_dir, "miner_state.npz")
 
-    def _checkpoint(self, itemsets, levels, level, next_k, item_map, n, min_count):
+    def _checkpoint(self, itemsets, levels, level, next_k, item_map, n,
+                    min_count, config):
         path = self._ckpt_path()
         if path is None:
             return
@@ -146,20 +171,26 @@ class FrequentItemsetMiner:
             "next_k": next_k,
             "n": n,
             "min_count": min_count,
+            "config": json.dumps(config, sort_keys=True),
         }
         tmp = path + ".tmp.npz"
         np.savez(tmp, item_map=item_map, **payload)
         os.replace(tmp, path)  # atomic snapshot
 
-    def _try_restore(self, n: int, min_count: int):
+    def _try_restore(self, n: int, min_count: int, config: dict):
         path = self._ckpt_path()
         if path is None or not os.path.exists(path):
             return None
         z = np.load(path, allow_pickle=False)
         if int(z["n"]) != n or int(z["min_count"]) != min_count:
             return None  # stale checkpoint from a different run
+        if "config" not in z.files or \
+                str(z["config"]) != json.dumps(config, sort_keys=True):
+            # Written under a different runner/store/strategy/max_k (or by a
+            # pre-runtime version): resuming would silently mix configs.
+            return None
         itemsets = {tuple(s): int(c) for s, c in json.loads(str(z["itemsets"]))}
-        levels = [LevelStats(**d) for d in json.loads(str(z["levels"]))]
+        levels = [JobProfile(**d) for d in json.loads(str(z["levels"]))]
         level = [tuple(s) for s in json.loads(str(z["level"]))]
         next_k = int(z["next_k"])
         item_map = z["item_map"]

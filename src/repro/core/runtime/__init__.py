@@ -1,0 +1,49 @@
+"""Backend-agnostic MapReduce job runtime.
+
+Every Apriori pass — Job1 (1-itemset histogram) and the per-level counting
+Job2s — is the same MapReduce job shape: mapper count over transaction
+chunks, in-chunk combiner, global reducer.  This package owns that shape:
+
+``job.py``
+    ``CountJob`` (the job spec a driver submits) and ``JobProfile`` (the one
+    per-phase profile schema every execution backend reports through, unifying
+    the old ``IterationProfile``/``LevelStats`` split).
+
+``engine.py``
+    The jit/shard_map counting core shared by the JAX runners, with an async
+    double-buffered candidate-chunk dispatch queue and the device-side Job1.
+
+``runners.py``
+    The three execution backends behind one interface: ``SimRunner`` (the
+    paper's Hadoop cost model over the Java-equivalent stores), ``JaxRunner``
+    (single device) and ``ShardedRunner`` (mesh + shard_map).
+
+``strategies.py``
+    The level-wise wave schedulers (SPC/FPC/DPC), threaded through the
+    runners' pipelined ``count_async`` API.
+
+Drivers (``core.miner.FrequentItemsetMiner``, ``core.hadoop_sim``) no longer
+own job loops; they ingest data, pick a runner, and iterate a strategy.
+"""
+
+from repro.core.runtime.job import CountJob, JobProfile
+from repro.core.runtime.engine import MapReduceEngine, PendingCounts
+from repro.core.runtime.runners import (
+    BaseRunner,
+    JaxRunner,
+    ShardedRunner,
+    SimRunner,
+    make_runner,
+)
+
+__all__ = [
+    "CountJob",
+    "JobProfile",
+    "MapReduceEngine",
+    "PendingCounts",
+    "BaseRunner",
+    "SimRunner",
+    "JaxRunner",
+    "ShardedRunner",
+    "make_runner",
+]

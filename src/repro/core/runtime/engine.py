@@ -1,0 +1,278 @@
+"""MapReduce-on-JAX counting engine (Hadoop job ≙ one jit'd count step).
+
+Mapper  = per-device count over its transaction shard (``data`` mesh axes);
+Combiner = the in-shard reduction inside ``count_block`` (sum over Nb);
+Shuffle+Reducer = ``lax.psum`` of the per-shard count vectors over the data
+axes, followed by host-side min-support thresholding.
+
+The transaction tensors are placed (sharded) once and reused across levels;
+each level's candidate arrays are replicated — the analogue of Hadoop's
+distributed cache shipping L_{k-1} to every mapper. A new candidate shape
+triggers one compile, the analogue of per-iteration job submission.
+
+Per wave, only the small (C, k) int32 candidate matrix crosses the host
+boundary; the store-specific candidate tensors (k-hot rows, packed words,
+bucket hashes) are built on device by the store's jit'd ``encode_candidates``.
+
+Wave dispatch is **async and double-buffered**: ``count_candidates_async``
+splits a wave into ``cand_block`` chunks and dispatches each without
+blocking (JAX async dispatch), keeping up to ``inflight`` chunk results
+outstanding in a FIFO before forcing the oldest to host.  The host is free
+to run the next level's ``apriori_gen_matrix`` while the device counts —
+``inflight=0`` degenerates to the old blocking per-chunk behaviour, and the
+returned counts are bit-identical at any depth (the queue only reorders
+*waiting*, never arithmetic).
+
+Job1 (the 1-itemset histogram) is a device job through the same machinery:
+``count_items_device`` scatter-adds the padded transaction matrix into a
+histogram, sharded over the same data axes and reduced with the same psum.
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.stores import ARRAY_STORES, EncodedDB, pad_candidates
+from repro.core.stores.base import ITEM_PAD
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # older jax: shard_map still lives under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+class PendingCounts:
+    """Handle for an in-flight counting wave; ``result()`` blocks and joins.
+
+    Chunk results are resolved strictly in dispatch order through the
+    engine's FIFO, so counts are independent of the ``inflight`` depth.
+    """
+
+    def __init__(self, engine: "MapReduceEngine", n_chunks: int) -> None:
+        self._engine = engine
+        self._parts: List[Optional[np.ndarray]] = [None] * n_chunks
+        self._cancelled = False
+
+    @property
+    def done(self) -> bool:
+        return all(p is not None for p in self._parts)
+
+    def result(self) -> np.ndarray:
+        while not self.done:
+            if self._cancelled or not self._engine._queue:
+                raise RuntimeError(
+                    "counting wave was cancelled: place() re-placed the DB "
+                    "while this handle's chunks were still in flight"
+                )
+            self._engine._force_oldest()
+        if not self._parts:
+            return np.zeros((0,), np.int64)
+        return np.concatenate(self._parts)
+
+
+class MapReduceEngine:
+    def __init__(
+        self,
+        store: str = "perfect_hash",
+        mesh: Optional[Mesh] = None,
+        data_axes: Tuple[str, ...] = ("data",),
+        block_n: int = 2048,
+        cand_block: int = 32_768,
+        inflight: int = 1,
+    ) -> None:
+        if store not in ARRAY_STORES:
+            raise ValueError(f"unknown store {store!r}; pick from {list(ARRAY_STORES)}")
+        self.store = ARRAY_STORES[store]
+        self.store_name = store
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.block_n = block_n
+        self.cand_block = cand_block  # bounds per-dispatch candidate memory
+        self.inflight = inflight      # max un-fetched chunk dispatches queued
+        self._trans_device = None
+        self._enc: Optional[EncodedDB] = None
+        self._count_jit = None
+        self._encode_jit = None
+        # FIFO of (pending, slot, device_counts, n_valid) across all waves.
+        self._queue: Deque[tuple] = collections.deque()
+        self._job1_jit = {}  # (N, L, n_items) -> compiled histogram job
+
+    # -- placement ---------------------------------------------------------
+    @property
+    def n_data_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    def place(self, enc: EncodedDB) -> None:
+        """Shard transaction tensors over the data axes; keep them resident."""
+        for pending, _, _, _ in self._queue:  # handles from a prior DB are void
+            pending._cancelled = True
+        self._queue.clear()
+        shards = self.n_data_shards
+        n = enc.n_transactions
+        n_padded = ((n + shards - 1) // shards) * shards
+        enc = enc.pad_transactions_to(n_padded)
+        trans = self.store.transaction_inputs(enc)
+        if self.mesh is not None:
+            sharding = NamedSharding(self.mesh, P(self.data_axes))
+            trans = {k: jax.device_put(v, sharding) for k, v in trans.items()}
+        else:
+            trans = {k: jnp.asarray(v) for k, v in trans.items()}
+        self._trans_device = trans
+        self._enc = enc
+        self._count_jit = None  # built lazily (needs the candidate tree structure)
+        # Device-side candidate encoder: (C, k) int32 -> the store's candidate
+        # tensors, all built on device (jit caches per (C, k) shape).
+        self._encode_jit = jax.jit(
+            functools.partial(self.store.encode_candidates, f_pad=enc.f_pad)
+        )
+
+    def _blocked_count(self, trans: dict, cands: dict) -> jnp.ndarray:
+        """Mapper body: lax.map over Nb-blocks bounds peak (Nb, C) memory."""
+        n = next(iter(trans.values())).shape[0]
+        block_n = max(1, min(self.block_n, n))  # n == 0 guarded by callers
+        n_blocks = max(1, n // block_n)
+        usable = n_blocks * block_n
+
+        def body(block):
+            return self.store.count_block(block, cands)
+
+        blocks = {k: v[:usable].reshape(n_blocks, block_n, *v.shape[1:])
+                  for k, v in trans.items()}
+        partial = jax.lax.map(lambda b: body(b), blocks).sum(axis=0)
+        if usable < n:  # ragged tail block
+            tail = {k: v[usable:] for k, v in trans.items()}
+            partial = partial + body(tail)
+        return partial
+
+    def _build_count_fn(self, cands_example: dict):
+        if self.mesh is None:
+            return jax.jit(self._blocked_count)
+
+        data_spec = P(self.data_axes)
+
+        def sharded(trans, cands):
+            local = self._blocked_count(trans, cands)
+            return jax.lax.psum(local, self.data_axes)  # shuffle + reduce
+
+        fn = _shard_map(
+            sharded,
+            mesh=self.mesh,
+            in_specs=(
+                jax.tree.map(lambda _: data_spec, self._trans_device),
+                jax.tree.map(lambda _: P(), cands_example),
+            ),
+            out_specs=P(),
+        )
+        return jax.jit(fn)
+
+    # -- counting ------------------------------------------------------------
+    def _dispatch_chunk(self, chunk: np.ndarray):
+        """Encode + dispatch one candidate chunk; returns the *unfetched*
+        device counts (JAX async dispatch — nothing here blocks on compute)."""
+        cand_p = pad_candidates(chunk, self._enc.f_pad)
+        cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
+        if self.mesh is not None:
+            rep = NamedSharding(self.mesh, P())
+            cand_dev = jax.device_put(cand_dev, rep)
+        cands = self._encode_jit(cand_dev)
+        if self.mesh is not None:
+            cands = {k: jax.device_put(v, rep) for k, v in cands.items()}
+        if self._count_jit is None:
+            self._count_jit = self._build_count_fn(cands)
+        return self._count_jit(self._trans_device, cands)
+
+    def _force_oldest(self) -> None:
+        """Fetch the oldest outstanding chunk result to host (blocking)."""
+        pending, slot, dev, c = self._queue.popleft()
+        counts = np.asarray(jax.device_get(dev))
+        pending._parts[slot] = counts[:c].astype(np.int64)
+
+    def count_candidates_async(self, cand: np.ndarray) -> PendingCounts:
+        """Dispatch a counting wave without blocking.
+
+        cand: (C, k) dense-id candidate matrix.  The wave streams through in
+        ``cand_block``-sized chunks; at most ``inflight`` chunk results stay
+        queued on device before the oldest is forced to host.
+        """
+        assert self._enc is not None, "call place(enc) first"
+        if cand.size == 0:
+            return PendingCounts(self, 0)
+        cand = np.ascontiguousarray(np.asarray(cand, dtype=np.int32))
+        if self._enc.n_transactions == 0:
+            # Degenerate DB: zero transactions support nothing; skip dispatch.
+            pending = PendingCounts(self, 1)
+            pending._parts[0] = np.zeros((cand.shape[0],), np.int64)
+            return pending
+        starts = range(0, cand.shape[0], self.cand_block)
+        pending = PendingCounts(self, len(starts))
+        for slot, i in enumerate(starts):
+            chunk = cand[i : i + self.cand_block]
+            dev = self._dispatch_chunk(chunk)
+            self._queue.append((pending, slot, dev, chunk.shape[0]))
+            while len(self._queue) > self.inflight:
+                self._force_oldest()
+        return pending
+
+    def count_candidates(self, cand: np.ndarray) -> np.ndarray:
+        """Blocking wrapper: (C, k) candidate matrix -> int64[C] counts."""
+        return self.count_candidates_async(cand).result()
+
+    # -- L1 (Job1: OneItemsetMapper + reducer) -------------------------------
+    def count_items_device(self, padded: np.ndarray, n_items: int) -> np.ndarray:
+        """Device-side Job1: histogram of the (N, L) padded id matrix.
+
+        One scatter-add job over the encoded DB — rows hold *unique* sorted
+        ids padded with ITEM_PAD, so presence counting falls out of a plain
+        bincount.  Sharded over the same data axes (and reduced with the same
+        psum) as every other counting job; no per-transaction Python loop.
+        """
+        n = padded.shape[0]
+        if n == 0 or n_items == 0:
+            return np.zeros((n_items,), np.int64)
+        shards = self.n_data_shards
+        n_padded = ((n + shards - 1) // shards) * shards
+        if n_padded != n:
+            pad = np.full((n_padded - n, padded.shape[1]), ITEM_PAD, np.int32)
+            padded = np.concatenate([padded, pad])
+
+        def hist_local(p):
+            # ITEM_PAD rows (and any id >= n_items) land in the dump slot.
+            ids = jnp.where(p < n_items, p, n_items)
+            h = jnp.zeros((n_items + 1,), jnp.int32).at[ids.ravel()].add(1)
+            return h[:n_items]
+
+        key = (padded.shape, n_items)
+        if self.mesh is None:
+            dev = jnp.asarray(padded)
+            if key not in self._job1_jit:
+                self._job1_jit[key] = jax.jit(hist_local)
+        else:
+            sharding = NamedSharding(self.mesh, P(self.data_axes))
+            dev = jax.device_put(padded, sharding)
+            if key not in self._job1_jit:
+                def sharded(p):
+                    return jax.lax.psum(hist_local(p), self.data_axes)
+
+                self._job1_jit[key] = jax.jit(_shard_map(
+                    sharded, mesh=self.mesh,
+                    in_specs=(P(self.data_axes),), out_specs=P()))
+        hist = self._job1_jit[key](dev)
+        return np.asarray(jax.device_get(hist)).astype(np.int64)
+
+    @staticmethod
+    def count_items(transactions, n_items: int) -> np.ndarray:
+        """Host fallback for Job1 (kept as the device path's oracle)."""
+        if len(transactions) == 0:
+            return np.zeros((n_items,), np.int64)
+        flat = np.concatenate([np.unique(np.asarray(t, np.int64)) for t in transactions])
+        return np.bincount(flat, minlength=n_items).astype(np.int64)

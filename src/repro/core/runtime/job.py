@@ -1,0 +1,92 @@
+"""Job spec and the unified per-job profile schema.
+
+``JobProfile`` replaces both of the repo's historical profiling dataclasses
+(``hadoop_sim.IterationProfile`` and ``miner.LevelStats``): every runner —
+the Hadoop cost-model simulator and the JAX backends alike — reports one row
+per counting job through this schema, so ``benchmarks/`` can put the
+Java-equivalent and array-store paths side by side in one table.
+
+Phase fields (seconds; a backend leaves phases it does not have at 0.0):
+
+====================  ====================================================
+``gen_seconds``       candidate generation (host ``apriori_gen_matrix``,
+                      or max-over-mappers apriori-gen in the simulator)
+``build_seconds``     candidate-structure build (max-over-mappers tree /
+                      trie construction in the simulator)
+``encode_seconds``    host->device candidate encode + dispatch (JAX)
+``count_seconds``     mapper counting: device wait (JAX) or
+                      max-over-mappers transaction scan (simulator)
+``reduce_seconds``    reducer: partial-count merge (simulator) or
+                      host-side threshold/fetch bookkeeping (JAX)
+====================  ====================================================
+
+``mapper_seconds`` keeps the simulator's per-mapper wall clocks so its
+max-mapper parallel-time model (``parallel_seconds``) survives unification;
+JAX jobs leave it empty, making ``parallel_seconds == seconds``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class JobProfile:
+    k: int                      # (top) level the job counted
+    n_candidates: int = 0
+    n_frequent: int = 0
+    seconds: float = 0.0        # total job wall-clock as the driver saw it
+    gen_seconds: float = 0.0
+    build_seconds: float = 0.0
+    encode_seconds: float = 0.0
+    count_seconds: float = 0.0
+    reduce_seconds: float = 0.0
+    mapper_seconds: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def parallel_seconds(self) -> float:
+        """Simulated-cluster time: max mapper + reduce (the paper's model).
+
+        Backends without per-mapper timing report their wall clock."""
+        if self.mapper_seconds:
+            return max(self.mapper_seconds) + self.reduce_seconds
+        return self.seconds
+
+    @property
+    def sequential_seconds(self) -> float:
+        if self.mapper_seconds:
+            return sum(self.mapper_seconds) + self.reduce_seconds
+        return self.seconds
+
+
+@dataclasses.dataclass
+class CountJob:
+    """One counting job: count every row of ``cand`` over the placed DB.
+
+    ``cand``      (C, k) int32 candidate matrix in dense item ids, rows in
+                  lexicographic order (the canonical level-matrix form).
+    ``min_count`` the job's support threshold, carried for bookkeeping (a
+                  runner may log or shard by it). Runners return *raw* global
+                  counts for every candidate row — thresholding is the
+                  strategy's reduce step, never per-mapper (a local pre-filter
+                  at min_count would drop itemsets whose partial counts are
+                  individually small but globally frequent).
+    ``level``     optional (L, k-1) frequent-level matrix the wave was
+                  generated from.  The simulator uses it to re-run
+                  apriori-gen + structure build *inside every mapper* — the
+                  per-iteration fixed cost the paper measures.  Speculative
+                  waves (FPC/DPC tails) carry ``level=None`` and the
+                  structure is built from ``cand`` directly.
+    """
+
+    k: int
+    cand: np.ndarray
+    min_count: int = 1
+    level: Optional[np.ndarray] = None
+
+    @property
+    def n_candidates(self) -> int:
+        return int(self.cand.shape[0]) if self.cand.size else 0

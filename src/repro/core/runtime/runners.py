@@ -1,0 +1,343 @@
+"""The three execution backends behind one runner interface.
+
+A runner owns job execution only — drivers own *what* to count, runners own
+*how*:
+
+``ingest(transactions)``   take the raw database (original item ids);
+``job1()``                 the 1-itemset histogram job -> (hist, JobProfile);
+``place(item_map)``        dense re-encode over the frequent items and make
+                           the DB resident for counting jobs;
+``count_async(job)``       submit a ``CountJob``; the returned handle's
+                           ``result()`` -> (int64[C] counts, JobProfile).
+
+``SimRunner`` absorbs the Job1/Job2 mapper loops of the old
+``core.hadoop_sim`` driver: mappers are executed sequentially but timed
+individually, every Job2 mapper re-runs apriori-gen and rebuilds its
+candidate structure (the paper's per-iteration fixed cost), and the profile
+keeps per-mapper wall clocks so ``JobProfile.parallel_seconds`` reproduces
+the ``max(mappers) + reduce`` cluster model.
+
+``JaxRunner``/``ShardedRunner`` share the ``MapReduceEngine`` counting core;
+their ``count_async`` is genuinely asynchronous (double-buffered chunk
+dispatch), letting the strategy overlap host-side candidate generation with
+device counting.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.itemsets import Itemset, apriori_gen, matrix_to_level
+from repro.core.runtime.engine import MapReduceEngine
+from repro.core.runtime.job import CountJob, JobProfile
+from repro.core.sequential import SEQUENTIAL_STORES
+from repro.core.stores import encode_db_from_padded, padded_from_transactions
+from repro.core.stores.base import ITEM_PAD
+
+
+def _chunks(transactions: Sequence[Sequence[int]], n_mappers: int):
+    n = len(transactions)
+    if n == 0:  # degenerate DB still schedules every mapper slot (empty splits)
+        return [[] for _ in range(n_mappers)]
+    size = (n + n_mappers - 1) // n_mappers
+    return [transactions[i : i + size] for i in range(0, n, size)]
+
+
+def _generate_and_build(store_cls, structure: str, level, child_max_size: int):
+    """One mapper's per-iteration fixed cost, phase-timed.
+
+    The hash tree consumes an externally generated C_k (Algorithm 4); the
+    trie family generates C_k from its own L_{k-1} structure. Both paths are
+    folded here so every Job2 mapper shares one code path and the profile can
+    attribute candidate-generation vs structure-build time separately.
+    """
+    t0 = time.perf_counter()
+    if structure == "hash_tree":
+        cands = apriori_gen(level)
+        gen_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        store = store_cls(cands, child_max_size=child_max_size)
+    else:
+        cands = store_cls(level).generate_candidates()
+        gen_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        store = store_cls(cands)
+    return cands, store, gen_s, time.perf_counter() - t1
+
+
+class _Done:
+    """Completed-job handle: sync backends return results immediately."""
+
+    def __init__(self, counts: np.ndarray, profile: JobProfile) -> None:
+        self._out = (counts, profile)
+
+    def result(self) -> Tuple[np.ndarray, JobProfile]:
+        return self._out
+
+
+class BaseRunner:
+    kind = "base"
+    supports_async = False  # True => count_async overlaps with host work
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+    def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
+        raise NotImplementedError
+
+    @property
+    def n_raw_items(self) -> int:
+        """max original item id + 1 of the ingested DB."""
+        return self._n_raw
+
+    def job1(self) -> Tuple[np.ndarray, JobProfile]:
+        raise NotImplementedError
+
+    def place(self, item_map: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def count_async(self, job: CountJob):
+        raise NotImplementedError
+
+    def count(self, job: CountJob) -> Tuple[np.ndarray, JobProfile]:
+        return self.count_async(job).result()
+
+
+class SimRunner(BaseRunner):
+    """The paper's Hadoop cluster cost model over the Java-equivalent stores."""
+
+    kind = "sim"
+    supports_async = False
+
+    def __init__(self, structure: str = "trie", n_mappers: int = 4,
+                 child_max_size: int = 20) -> None:
+        if structure not in SEQUENTIAL_STORES:
+            raise ValueError(f"unknown structure {structure!r}")
+        self.structure = structure
+        self.store_cls = SEQUENTIAL_STORES[structure]
+        self.n_mappers = n_mappers
+        self.child_max_size = child_max_size
+        self._raw: Optional[Sequence[Sequence[int]]] = None
+        self._chunks_raw: Optional[List[Sequence[Sequence[int]]]] = None
+        self._item_map: Optional[np.ndarray] = None
+        self._n_raw = 0
+
+    def describe(self) -> str:
+        return f"sim/{self.structure}/m{self.n_mappers}"
+
+    def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
+        self._raw = transactions
+        self._n_raw = max((max(t) for t in transactions if len(t)), default=-1) + 1
+        self._chunks_raw = None  # stale until the next place(item_map)
+        self._item_map = None
+
+    # -- Job1: OneItemsetMapper + combiner + reducer (Algorithm 2) ----------
+    def job1(self) -> Tuple[np.ndarray, JobProfile]:
+        t_job = time.perf_counter()
+        mapper_times: List[float] = []
+        partials: List[Dict[int, int]] = []
+        for chunk in _chunks(self._raw, self.n_mappers):
+            t0 = time.perf_counter()
+            local: Dict[int, int] = {}
+            for t in chunk:
+                for item in set(t):
+                    local[int(item)] = local.get(int(item), 0) + 1  # combiner folded in
+            mapper_times.append(time.perf_counter() - t0)
+            partials.append(local)
+        t0 = time.perf_counter()
+        hist = np.zeros((self._n_raw,), np.int64)
+        for local in partials:
+            for item, c in local.items():
+                hist[item] += c
+        reduce_s = time.perf_counter() - t0
+        prof = JobProfile(
+            k=1, n_candidates=int(np.count_nonzero(hist)),
+            seconds=time.perf_counter() - t_job,
+            count_seconds=max(mapper_times, default=0.0),
+            reduce_seconds=reduce_s, mapper_seconds=mapper_times,
+        )
+        return hist, prof
+
+    def place(self, item_map: np.ndarray) -> None:
+        # Mappers stay faithful to Algorithm 3 and consume the *raw*
+        # transaction chunks (infrequent items included, exactly the workload
+        # the paper's cluster measures). The driver's dense-id jobs are
+        # translated to original ids at the (small) candidate matrix instead
+        # — item_map is sorted ascending, so translation preserves the
+        # canonical lexicographic row order.
+        self._item_map = np.asarray(item_map, np.int64)
+        self._chunks_raw = _chunks(self._raw, self.n_mappers)
+
+    # -- Job2 (Algorithm 3): per-mapper gen + build + count, global reduce --
+    def count_async(self, job: CountJob) -> _Done:
+        return _Done(*self.count(job))
+
+    def count(self, job: CountJob) -> Tuple[np.ndarray, JobProfile]:
+        assert self._chunks_raw is not None, "call place(item_map) first"
+        t_job = time.perf_counter()
+        cand_rows = matrix_to_level(self._item_map[job.cand]
+                                    if job.cand.size else job.cand)
+        level = matrix_to_level(self._item_map[job.level]) if (
+            job.level is not None and job.level.size) else None
+        mapper_times: List[float] = []
+        gen_times: List[float] = []
+        build_times: List[float] = []
+        count_times: List[float] = []
+        partials: List[Dict[Itemset, int]] = []
+        for chunk in self._chunks_raw:
+            t0 = time.perf_counter()
+            if level is not None:
+                # Every mapper re-generates C_k from the cached L_{k-1} and
+                # builds its own structure — the paper's per-mapper fixed cost.
+                _, store, gen_s, build_s = _generate_and_build(
+                    self.store_cls, self.structure, level, self.child_max_size
+                )
+            else:
+                # Speculative wave (FPC/DPC): C_k ships via distributed cache.
+                gen_s = 0.0
+                t1 = time.perf_counter()
+                if self.structure == "hash_tree":
+                    store = self.store_cls(cand_rows,
+                                           child_max_size=self.child_max_size)
+                else:
+                    store = self.store_cls(cand_rows)
+                build_s = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            for t in chunk:
+                store.count_transaction(t)
+            local = {s: c for s, c in store.counts().items() if c > 0}
+            count_times.append(time.perf_counter() - t1)
+            gen_times.append(gen_s)
+            build_times.append(build_s)
+            mapper_times.append(time.perf_counter() - t0)
+            partials.append(local)
+        t0 = time.perf_counter()
+        index = {s: i for i, s in enumerate(cand_rows)}
+        counts = np.zeros((len(cand_rows),), np.int64)
+        for local in partials:
+            for s, c in local.items():
+                i = index.get(s)
+                if i is not None:
+                    counts[i] += c
+        reduce_s = time.perf_counter() - t0
+        prof = JobProfile(
+            k=job.k, n_candidates=len(cand_rows),
+            seconds=time.perf_counter() - t_job,
+            gen_seconds=max(gen_times, default=0.0),
+            build_seconds=max(build_times, default=0.0),
+            count_seconds=max(count_times, default=0.0),
+            reduce_seconds=reduce_s, mapper_seconds=mapper_times,
+        )
+        return counts, prof
+
+
+class _JaxPending:
+    """Async-job handle: blocks on the engine FIFO, then fills the profile."""
+
+    def __init__(self, runner: "JaxRunner", job: CountJob, pending,
+                 encode_s: float) -> None:
+        self._runner = runner
+        self._job = job
+        self._pending = pending
+        self._encode_s = encode_s
+
+    def result(self) -> Tuple[np.ndarray, JobProfile]:
+        t0 = time.perf_counter()
+        counts = self._pending.result()
+        wait_s = time.perf_counter() - t0
+        prof = JobProfile(
+            k=self._job.k, n_candidates=self._job.n_candidates,
+            seconds=self._encode_s + wait_s,
+            encode_seconds=self._encode_s, count_seconds=wait_s,
+        )
+        return counts, prof
+
+
+class JaxRunner(BaseRunner):
+    """Single-device MapReduce-on-JAX runner (array-layout stores)."""
+
+    kind = "jax"
+
+    @property
+    def supports_async(self) -> bool:
+        # inflight=0 forces every chunk during dispatch (fully synchronous),
+        # so speculative host-side generation would be pure wasted work.
+        return self.engine.inflight > 0
+
+    def __init__(self, store: str = "perfect_hash", block_n: int = 2048,
+                 cand_block: int = 32_768, inflight: int = 1,
+                 mesh=None, data_axes: Tuple[str, ...] = ("data",)) -> None:
+        self.engine = MapReduceEngine(
+            store=store, mesh=mesh, data_axes=data_axes,
+            block_n=block_n, cand_block=cand_block, inflight=inflight,
+        )
+        self._padded_raw: Optional[np.ndarray] = None
+        self._n_raw = 0
+
+    def describe(self) -> str:
+        return f"{self.kind}/{self.engine.store_name}"
+
+    def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
+        # The single host pass over the raw lists; everything downstream
+        # (Job1, dense re-encode, counting) is vectorized or on device.
+        self._padded_raw, self._n_raw = padded_from_transactions(transactions)
+
+    def job1(self) -> Tuple[np.ndarray, JobProfile]:
+        t0 = time.perf_counter()
+        hist = self.engine.count_items_device(self._padded_raw, self._n_raw)
+        wall = time.perf_counter() - t0
+        # n_candidates = distinct items actually observed — the same Job1
+        # semantic as SimRunner, keeping k=1 rows comparable across backends.
+        prof = JobProfile(k=1, n_candidates=int(np.count_nonzero(hist)),
+                          seconds=wall, count_seconds=wall)
+        return hist, prof
+
+    def place(self, item_map: np.ndarray) -> None:
+        """Vectorized dense re-encode over the frequent items (Apriori
+        property: no candidate may contain an infrequent item)."""
+        padded, n_raw = self._padded_raw, self._n_raw
+        f = len(item_map)
+        lookup = np.full((n_raw + 1,), ITEM_PAD, np.int32)
+        if f:
+            lookup[np.asarray(item_map, np.int64)] = np.arange(f, dtype=np.int32)
+        dense = lookup[np.minimum(padded, n_raw)]  # infrequent/pad -> ITEM_PAD
+        dense.sort(axis=1)  # rows stay unique-sorted; ITEM_PAD collects at end
+        width = int((dense < ITEM_PAD).sum(axis=1).max()) if dense.size else 0
+        width = max(8, width)
+        dense = np.ascontiguousarray(dense[:, :width])
+        self.engine.place(encode_db_from_padded(dense, n_items=f))
+
+    def count_async(self, job: CountJob) -> _JaxPending:
+        t0 = time.perf_counter()
+        pending = self.engine.count_candidates_async(job.cand)
+        return _JaxPending(self, job, pending, time.perf_counter() - t0)
+
+
+class ShardedRunner(JaxRunner):
+    """Mesh-parallel runner: transactions sharded over the data axes,
+    per-shard counts psum-reduced (shard_map) — the cluster path."""
+
+    kind = "sharded"
+
+    def __init__(self, store: str = "perfect_hash", mesh=None,
+                 data_axes: Tuple[str, ...] = ("data",), block_n: int = 2048,
+                 cand_block: int = 32_768, inflight: int = 1) -> None:
+        if mesh is None:
+            from repro.launch.mesh import make_data_mesh
+
+            mesh = make_data_mesh()
+        super().__init__(store=store, block_n=block_n, cand_block=cand_block,
+                         inflight=inflight, mesh=mesh, data_axes=data_axes)
+
+
+def make_runner(store: str = "perfect_hash", mesh=None,
+                data_axes: Tuple[str, ...] = ("data",), block_n: int = 2048,
+                inflight: int = 1) -> BaseRunner:
+    """Default runner selection for drivers: mesh => sharded, else single."""
+    if mesh is not None:
+        return ShardedRunner(store=store, mesh=mesh, data_axes=data_axes,
+                             block_n=block_n, inflight=inflight)
+    return JaxRunner(store=store, block_n=block_n, inflight=inflight)

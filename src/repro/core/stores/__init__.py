@@ -21,7 +21,8 @@ the only per-wave host-to-device transfer.
 """
 
 from repro.core.stores.base import (
-    EncodedDB, encode_db, pack_bitmap, pad_candidates, ITEM_PAD, WORD_BITS,
+    EncodedDB, encode_db, encode_db_from_padded, pack_bitmap, pad_candidates,
+    padded_from_transactions, ITEM_PAD, WORD_BITS,
 )
 from repro.core.stores.perfect_hash import PerfectHashStore
 from repro.core.stores.sorted_prefix import SortedPrefixStore
@@ -40,6 +41,8 @@ ARRAY_STORES = {
 __all__ = [
     "EncodedDB",
     "encode_db",
+    "encode_db_from_padded",
+    "padded_from_transactions",
     "pack_bitmap",
     "pad_candidates",
     "ITEM_PAD",

@@ -81,6 +81,40 @@ class EncodedDB:
         return out
 
 
+def padded_from_transactions(
+    transactions: Sequence[Sequence[int]], min_len: int = 8
+) -> tuple:
+    """One host pass over raw transaction lists -> ((N, L) int32 padded
+    matrix of unique sorted ids, ITEM_PAD-padded; max item id + 1).
+
+    This is the single per-transaction Python loop of the ingestion path —
+    Job1 and the dense re-encode both derive from the returned matrix with
+    vectorized (or on-device) operations.
+    """
+    n = len(transactions)
+    rows = [sorted(set(int(x) for x in t)) for t in transactions]
+    lmax = max(min_len, max((len(r) for r in rows), default=1))
+    padded = np.full((n, lmax), ITEM_PAD, dtype=np.int32)
+    for i, r in enumerate(rows):
+        padded[i, : len(r)] = r
+    n_raw = max((r[-1] for r in rows if r), default=-1) + 1
+    return padded, n_raw
+
+
+def encode_db_from_padded(
+    padded: np.ndarray, n_items: int, align: int = 128
+) -> EncodedDB:
+    """Vectorized encode from an (N, L) padded matrix of dense ids in
+    [0, n_items) — no per-transaction Python loop."""
+    n = padded.shape[0]
+    f_pad = ((n_items // align) + 1) * align  # strictly greater than n_items
+    bitmap = np.zeros((n, f_pad), dtype=np.uint8)
+    rows, cols = np.nonzero(padded < ITEM_PAD)
+    bitmap[rows, padded[rows, cols]] = 1
+    return EncodedDB(padded=np.asarray(padded, dtype=np.int32),
+                     bitmap=bitmap, n_items=n_items)
+
+
 def encode_db(
     transactions: Sequence[Sequence[int]],
     n_items: int,
@@ -88,16 +122,8 @@ def encode_db(
     align: int = 128,
 ) -> EncodedDB:
     """Encode transactions whose items are already dense ids in [0, n_items)."""
-    n = len(transactions)
-    lmax = max(min_len, max((len(set(t)) for t in transactions), default=1))
-    padded = np.full((n, lmax), ITEM_PAD, dtype=np.int32)
-    f_pad = ((n_items // align) + 1) * align  # strictly greater than n_items
-    bitmap = np.zeros((n, f_pad), dtype=np.uint8)
-    for i, t in enumerate(transactions):
-        s = sorted(set(int(x) for x in t))
-        padded[i, : len(s)] = s
-        bitmap[i, s] = 1
-    return EncodedDB(padded=padded, bitmap=bitmap, n_items=n_items)
+    padded, _ = padded_from_transactions(transactions, min_len=min_len)
+    return encode_db_from_padded(padded, n_items=n_items, align=align)
 
 
 def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128) -> np.ndarray:

@@ -1,150 +1,15 @@
-"""Pass-combining strategies for the level-wise loop (related work [17]).
+"""Back-compat shim: strategies live in the job runtime now.
 
-SPC (Single Pass Counting) is the paper's own driver: one counting job per
-level k. FPC (Fixed Passes Combined-counting) counts a fixed number of
-consecutive candidate generations in one job; DPC (Dynamic Passes
-Combined-counting) keeps extending the combined wave until a candidate budget
-is hit. Combined waves generate C_{k+1} from *candidates* C_k (speculative —
-pruning checks run against C_k, not L_k), exactly the FPC/DPC trade-off: fewer
-jobs vs. more (possibly useless) candidates counted.
-
-Levels travel as (C, k) int32 matrices end-to-end: ``apriori_gen_matrix``
-joins/prunes on the sorted matrix and the engine counts it directly, so the
-generation -> counting hot path never round-trips through Python tuples.
-Tuples appear only in the yielded result dicts (the driver's checkpoint and
-reporting format).
-
-Each strategy is a generator yielding ``(LevelStats, {itemset: count})`` per
-counting job, so the driver can checkpoint after every job.
+The SPC/FPC/DPC wave schedulers moved to ``repro.core.runtime.strategies``
+(threaded through the runners' pipelined ``count_async`` API). Import from
+there in new code.
 """
 
-from __future__ import annotations
-
-import time
-from typing import Dict, List
-
-import numpy as np
-
-from repro.core.itemsets import (
-    Itemset,
-    apriori_gen_matrix,
-    level_to_matrix,
+from repro.core.runtime.strategies import (  # noqa: F401
+    dpc,
+    fpc,
+    get,
+    spc,
 )
 
-
-def _as_matrix(level) -> np.ndarray:
-    """Accept a (C, k) matrix or a sequence of itemset tuples."""
-    if isinstance(level, np.ndarray):
-        return level.astype(np.int32, copy=False)
-    return level_to_matrix(level)
-
-
-def _count_matrix(engine, cand_mat: np.ndarray, min_count: int):
-    """Count one candidate matrix; return the surviving rows and counts.
-
-    The surviving matrix keeps candidate (lexicographic) order, so it is a
-    canonical level matrix ready for the next ``apriori_gen_matrix``.
-    """
-    counts = engine.count_candidates(cand_mat)
-    keep = counts >= min_count
-    return cand_mat[keep], counts[keep]
-
-
-def _to_dict(mat: np.ndarray, counts: np.ndarray) -> Dict[Itemset, int]:
-    return {
-        tuple(int(x) for x in mat[i]): int(counts[i]) for i in range(mat.shape[0])
-    }
-
-
-def spc(engine, level, min_count: int, start_k: int, max_k: int):
-    """One job per level (the paper's Algorithm 1)."""
-    from repro.core.miner import LevelStats
-
-    mat = _as_matrix(level)
-    k = start_k
-    while mat.size and k <= max_k:
-        t0 = time.perf_counter()
-        cand = apriori_gen_matrix(mat)
-        if cand.size == 0:
-            return
-        mat, counts = _count_matrix(engine, cand, min_count)
-        frequent = _to_dict(mat, counts)
-        yield LevelStats(k, cand.shape[0], mat.shape[0],
-                         time.perf_counter() - t0), frequent
-        k += 1
-
-
-def _combined(engine, level, min_count, start_k, max_k, should_extend):
-    """Shared FPC/DPC body: one job counts a wave of candidate levels."""
-    from repro.core.miner import LevelStats
-
-    mat = _as_matrix(level)
-    k = start_k
-    while mat.size and k <= max_k:
-        t0 = time.perf_counter()
-        waves: List[np.ndarray] = []
-        cand = apriori_gen_matrix(mat)
-        while cand.size:
-            waves.append(cand)
-            if k + len(waves) - 1 >= max_k or not should_extend(waves):
-                break
-            cand = apriori_gen_matrix(cand)  # speculative: join/prune against C_k
-        if not waves:
-            return
-        n_cands = sum(w.shape[0] for w in waves)
-        # Mixed k in one job: count each wave as its own matrix (one device
-        # dispatch per k, one logical job) and merge.
-        frequent: Dict[Itemset, int] = {}
-        for wave in waves:
-            frequent.update(_to_dict(*_count_matrix(engine, wave, min_count)))
-        # Enforce downward closure across the combined wave: a (k+1)-itemset
-        # counted speculatively is only kept if all its k-subsets survived.
-        frequent = _closure_filter(frequent)
-        stats = LevelStats(
-            k + len(waves) - 1, n_cands, len(frequent),
-            time.perf_counter() - t0,
-        )
-        yield stats, frequent
-        top_k = max((len(s) for s in frequent), default=0)
-        mat = level_to_matrix([s for s in frequent if len(s) == top_k])
-        k = top_k + 1 if frequent else k + len(waves)
-
-
-def _closure_filter(frequent: Dict[Itemset, int]) -> Dict[Itemset, int]:
-    if not frequent:
-        return frequent
-    keep: Dict[Itemset, int] = {}
-    ks = sorted({len(s) for s in frequent})
-    surviving = {s for s in frequent if len(s) == ks[0]}
-    keep.update({s: frequent[s] for s in surviving})
-    for k in ks[1:]:
-        for s in (x for x in frequent if len(x) == k):
-            if all(s[:i] + s[i + 1 :] in surviving for i in range(k)):
-                keep[s] = frequent[s]
-        surviving = {s for s in keep if len(s) == k}
-    return keep
-
-
-def fpc(engine, level, min_count, start_k, max_k, passes: int = 3):
-    """Fixed number of combined passes per job."""
-    return _combined(
-        engine, level, min_count, start_k, max_k,
-        should_extend=lambda waves: len(waves) < passes,
-    )
-
-
-def dpc(engine, level, min_count, start_k, max_k, budget: int = 50_000):
-    """Extend the wave while the combined candidate count stays in budget."""
-    return _combined(
-        engine, level, min_count, start_k, max_k,
-        should_extend=lambda waves: sum(w.shape[0] for w in waves) < budget,
-    )
-
-
-_STRATEGIES = {"spc": spc, "fpc": fpc, "dpc": dpc}
-
-
-def get(name: str):
-    if name not in _STRATEGIES:
-        raise ValueError(f"unknown strategy {name!r}; pick from {list(_STRATEGIES)}")
-    return _STRATEGIES[name]
+__all__ = ["spc", "fpc", "dpc", "get"]

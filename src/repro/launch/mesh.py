@@ -25,6 +25,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat_make_mesh(shape, axes)
 
 
+def make_data_mesh(n_shards=None):
+    """1-D data-parallel mesh for the counting runtime's ShardedRunner:
+    transactions shard over ``data``, candidates replicate."""
+    n = n_shards or jax.device_count()
+    return compat_make_mesh((n,), ("data",))
+
+
 def make_host_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist (tests / single host)."""
     n = jax.device_count()

@@ -1,0 +1,249 @@
+"""Unified job runtime: runner parity across backends, async double-buffered
+wave determinism, device-side Job1, degenerate DBs, checkpoint config stamp."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FrequentItemsetMiner,
+    JobProfile,
+    MapReduceEngine,
+    brute_force_frequent,
+    run_mapreduce_apriori,
+)
+from repro.core.itemsets import level_to_matrix
+from repro.core.runtime import JaxRunner, ShardedRunner, SimRunner
+from repro.core.sequential import SEQUENTIAL_STORES
+from repro.core.stores import ARRAY_STORES, encode_db
+from repro.data import quest_generator
+from repro.launch.mesh import compat_make_mesh
+
+MIN_SUPPORT = 0.05
+
+
+@pytest.fixture(scope="module")
+def t10_db():
+    """Small T10-style (Quest) twin: enough levels to exercise the loop."""
+    return quest_generator(n_transactions=300, avg_transaction_len=8,
+                           n_items=50, n_patterns=30, seed=3)
+
+
+@pytest.fixture(scope="module")
+def oracle(t10_db):
+    return brute_force_frequent(t10_db, int(np.ceil(MIN_SUPPORT * len(t10_db))))
+
+
+def _mesh():
+    return compat_make_mesh((1,), ("data",))
+
+
+# -- runner parity matrix --------------------------------------------------
+@pytest.mark.parametrize("structure", list(SEQUENTIAL_STORES))
+def test_parity_sim_runner(t10_db, oracle, structure):
+    runner = SimRunner(structure=structure, n_mappers=3)
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT, runner=runner).mine(t10_db)
+    assert res.itemsets == oracle  # itemsets AND counts
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("strategy", ["spc", "fpc", "dpc"])
+def test_parity_jax_runner(t10_db, oracle, store, strategy):
+    runner = JaxRunner(store=store)
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT, strategy=strategy,
+                               runner=runner).mine(t10_db)
+    assert res.itemsets == oracle
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_parity_sharded_runner(t10_db, oracle, store):
+    runner = ShardedRunner(store=store, mesh=_mesh())
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT, runner=runner).mine(t10_db)
+    assert res.itemsets == oracle
+
+
+def test_both_drivers_emit_job_profiles(t10_db):
+    sim = run_mapreduce_apriori(t10_db, MIN_SUPPORT, structure="trie", n_mappers=3)
+    jax_res = FrequentItemsetMiner(min_support=MIN_SUPPORT).mine(t10_db)
+    assert all(isinstance(it, JobProfile) for it in sim.iterations)
+    assert all(isinstance(lv, JobProfile) for lv in jax_res.levels)
+    # The sim track keeps the max-mapper parallel-time model ...
+    assert all(len(it.mapper_seconds) == 3 for it in sim.iterations)
+    assert sim.parallel_seconds <= sim.sequential_seconds + 1e-9
+    # ... and both report through the same per-phase schema.
+    assert any(it.count_seconds > 0 for it in sim.iterations)
+    assert any(lv.count_seconds > 0 for lv in jax_res.levels)
+
+
+# -- async double-buffered wave dispatch -----------------------------------
+def _c2_wave(db):
+    # Shared wave recipe with the benchmark suites (min_count 5 on N=300).
+    from benchmarks.common import c2_wave
+
+    return c2_wave(db, min_frac=5 / len(db))
+
+
+def test_pipeline_determinism_engine(t10_db):
+    """Counts are bit-identical at every inflight depth (0 == sync)."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    assert mat.shape[0] > 8
+    enc = encode_db(dbd, n_items=n_items)
+    ref = None
+    for inflight in [0, 1, 2, 4]:
+        engine = MapReduceEngine(store="packed_bitmap", cand_block=64,
+                                 inflight=inflight)
+        engine.place(enc)
+        got = engine.count_candidates(mat)
+        if ref is None:
+            ref = got
+        np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("strategy", ["spc", "fpc"])
+def test_pipeline_determinism_miner(t10_db, oracle, strategy):
+    """Full mining results independent of the pipeline depth."""
+    for inflight in [0, 1, 4]:
+        runner = JaxRunner(store="perfect_hash", cand_block=64,
+                           inflight=inflight)
+        res = FrequentItemsetMiner(min_support=MIN_SUPPORT, strategy=strategy,
+                                   runner=runner).mine(t10_db)
+        assert res.itemsets == oracle
+
+
+def test_pending_handles_survive_interleaving(t10_db):
+    """Two waves dispatched before either is resolved still return correct
+    counts (the FIFO resolves strictly in dispatch order)."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    engine = MapReduceEngine(store="perfect_hash", cand_block=32, inflight=4)
+    engine.place(encode_db(dbd, n_items=n_items))
+    sync = MapReduceEngine(store="perfect_hash")
+    sync.place(encode_db(dbd, n_items=n_items))
+    half = mat.shape[0] // 2
+    p1 = engine.count_candidates_async(mat[:half])
+    p2 = engine.count_candidates_async(mat[half:])
+    # Resolve out of dispatch order on purpose.
+    np.testing.assert_array_equal(p2.result(), sync.count_candidates(mat[half:]))
+    np.testing.assert_array_equal(p1.result(), sync.count_candidates(mat[:half]))
+
+
+def test_place_cancels_outstanding_pendings(t10_db):
+    """Re-placing the DB voids in-flight handles loudly, not via IndexError."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    engine = MapReduceEngine(store="perfect_hash", cand_block=32, inflight=8)
+    engine.place(encode_db(dbd, n_items=n_items))
+    pending = engine.count_candidates_async(mat)
+    engine.place(encode_db(dbd[: len(dbd) // 2], n_items=n_items))
+    with pytest.raises(RuntimeError, match="cancelled"):
+        pending.result()
+
+
+def test_miner_rejects_runner_plus_backend_config():
+    with pytest.raises(ValueError, match="not both"):
+        FrequentItemsetMiner(store="bitmap", runner=JaxRunner())
+    with pytest.raises(ValueError, match="not both"):
+        FrequentItemsetMiner(inflight=4, runner=SimRunner())
+
+
+# -- device-side Job1 ------------------------------------------------------
+def test_job1_device_matches_host(t10_db):
+    runner = JaxRunner(store="perfect_hash")
+    runner.ingest(t10_db)
+    hist, prof = runner.job1()
+    np.testing.assert_array_equal(
+        hist, MapReduceEngine.count_items(t10_db, runner.n_raw_items))
+    assert prof.k == 1 and prof.seconds >= 0
+
+
+def test_job1_device_sharded(t10_db):
+    runner = ShardedRunner(store="perfect_hash", mesh=_mesh())
+    runner.ingest(t10_db)
+    hist, _ = runner.job1()
+    np.testing.assert_array_equal(
+        hist, MapReduceEngine.count_items(t10_db, runner.n_raw_items))
+
+
+# -- degenerate databases --------------------------------------------------
+def _all_runners():
+    return [
+        SimRunner(structure="trie", n_mappers=4),
+        JaxRunner(store="bitmap"),
+        ShardedRunner(store="perfect_hash", mesh=_mesh()),
+    ]
+
+
+@pytest.mark.parametrize("runner_idx", range(3))
+def test_mine_empty_db(runner_idx):
+    runner = _all_runners()[runner_idx]
+    res = FrequentItemsetMiner(min_support=0.1, runner=runner).mine([])
+    assert res.itemsets == {}
+    assert res.n_transactions == 0
+
+
+@pytest.mark.parametrize("runner_idx", range(3))
+def test_mine_all_infrequent(runner_idx):
+    """Every item unique: nothing survives Job1, the level loop is a no-op."""
+    db = [[i] for i in range(40)]
+    runner = _all_runners()[runner_idx]
+    res = FrequentItemsetMiner(min_support=0.5, runner=runner).mine(db)
+    assert res.itemsets == {}
+
+
+def test_engine_empty_db_zero_counts():
+    """A placed DB with no transactions counts everything as zero (the old
+    code divided by a zero block_n here)."""
+    engine = MapReduceEngine(store="bitmap")
+    engine.place(encode_db([], n_items=4))
+    got = engine.count_candidates(level_to_matrix([(0, 1), (2, 3)]))
+    np.testing.assert_array_equal(got, [0, 0])
+
+
+def test_hadoop_sim_empty_db():
+    res = run_mapreduce_apriori([], 0.1, structure="trie", n_mappers=4)
+    assert res.itemsets == {}
+
+
+@pytest.mark.parametrize("strategy", ["fpc", "dpc"])
+def test_checkpoint_restore_combined_strategy(tmp_path, t10_db, oracle, strategy):
+    """Combined waves yield mixed-k itemsets; the checkpointed level must
+    stay a rectangular top-k matrix so a same-config restart restores."""
+    d = str(tmp_path)
+    m = FrequentItemsetMiner(min_support=MIN_SUPPORT, strategy=strategy,
+                             checkpoint_dir=d)
+    assert m.mine(t10_db).itemsets == oracle
+    m2 = FrequentItemsetMiner(min_support=MIN_SUPPORT, strategy=strategy,
+                              checkpoint_dir=d)
+    min_count = max(1, int(np.ceil(MIN_SUPPORT * len(t10_db))))
+    assert m2._try_restore(len(t10_db), min_count,
+                           m2._config(m2._make_runner())) is not None
+    assert m2.mine(t10_db).itemsets == oracle  # restores, does not crash
+
+
+# -- checkpoint config aliasing --------------------------------------------
+def test_checkpoint_rejects_mismatched_config(tmp_path, t10_db, oracle):
+    d = str(tmp_path)
+    m = FrequentItemsetMiner(min_support=MIN_SUPPORT, store="perfect_hash",
+                             checkpoint_dir=d)
+    r1 = m.mine(t10_db)
+    assert r1.itemsets == oracle
+    n, mc = len(t10_db), r1.min_count
+
+    # Same config restores ...
+    same = FrequentItemsetMiner(min_support=MIN_SUPPORT, store="perfect_hash",
+                                checkpoint_dir=d)
+    assert same._try_restore(n, mc, same._config(same._make_runner())) is not None
+
+    # ... different store / strategy / max_k / runner kind must NOT resume.
+    for other in [
+        FrequentItemsetMiner(min_support=MIN_SUPPORT, store="bitmap",
+                             checkpoint_dir=d),
+        FrequentItemsetMiner(min_support=MIN_SUPPORT, strategy="fpc",
+                             checkpoint_dir=d),
+        FrequentItemsetMiner(min_support=MIN_SUPPORT, max_k=3,
+                             checkpoint_dir=d),
+        FrequentItemsetMiner(min_support=MIN_SUPPORT, checkpoint_dir=d,
+                             runner=SimRunner(structure="trie")),
+    ]:
+        assert other._try_restore(n, mc, other._config(other._make_runner())) \
+            is None
+        res = other.mine(t10_db)  # recomputes from scratch, still correct
+        if other.max_k >= r1.max_k:
+            assert res.itemsets == oracle
