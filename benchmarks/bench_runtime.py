@@ -1,19 +1,41 @@
-"""Unified runtime: sync vs async double-buffered wave dispatch, and Job1
-host-loop vs device histogram — the two hot-path moves of the runtime
-re-layering, with bit-identical-results checks inline."""
+"""Unified runtime: sync vs async double-buffered wave dispatch, Job1
+host-loop vs device histogram, and the cross-backend JobProfile comparison
+table (sim / jax / sharded x structure / store x k) — with
+bit-identical-results checks inline."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.runtime import JaxRunner, MapReduceEngine
+from repro.core.runtime import JaxRunner, MapReduceEngine, ShardedRunner, SimRunner
 from repro.core.stores import encode_db
 from repro.data import paper_datasets
 
-from benchmarks.common import SCALE, c2_wave, row, timed
+from benchmarks.common import SCALE, c2_wave, profile_meta, row, timed
 
 WAVE_STORE = "packed_bitmap"
 CAND_BLOCK = 512  # small chunks so one C2 wave streams as many dispatches
+TABLE_SUPPORT = 0.02  # cross-backend table: same workload for every backend
+TABLE_MAX_K = 6
+
+
+def _table_backends():
+    """The cross-backend matrix: one runner per (backend, structure/store)
+    row of the comparison table. The ``+process`` sim row measures real
+    mapper concurrency (``wall_ms``) against the simulated model
+    (``par_ms``); the auto row records the self-tuned queue depth."""
+    from repro.launch.mesh import make_data_cand_mesh, make_data_mesh
+
+    return [
+        SimRunner(structure="trie", n_mappers=4),
+        SimRunner(structure="hash_tree", n_mappers=4),
+        SimRunner(structure="trie", n_mappers=4, executor="process"),
+        JaxRunner(store="packed_bitmap"),
+        JaxRunner(store="perfect_hash", inflight=None),
+        ShardedRunner(store="packed_bitmap", mesh=make_data_mesh()),
+        ShardedRunner(store="packed_bitmap", mesh=make_data_cand_mesh(),
+                      cand_axes=("cand",)),
+    ]
 
 
 def run() -> list:
@@ -84,4 +106,24 @@ def run() -> list:
         out.append(row(f"runtime/mine_spc_{label}", sec * 1e6,
                        f"frequent={len(res.itemsets)};jobs={len(res.levels)};"
                        f"gen_ms={gen * 1e3:.1f};count_ms={cnt * 1e3:.1f}"))
+
+    # -- cross-backend JobProfile table -------------------------------------
+    # Same DB + support for every backend; one row per (backend, k). The row
+    # value is the paper's cluster model (parallel_seconds); meta carries the
+    # full per-phase split, so BENCH_runtime.json holds the whole table.
+    ref_sets = None
+    for runner in _table_backends():
+        from repro.core import FrequentItemsetMiner
+
+        label = runner.describe()
+        res = FrequentItemsetMiner(min_support=TABLE_SUPPORT, runner=runner,
+                                   max_k=TABLE_MAX_K).mine(db)
+        if hasattr(runner, "close"):
+            runner.close()
+        if ref_sets is None:
+            ref_sets = res.itemsets
+        assert res.itemsets == ref_sets, f"{label} diverged from reference"
+        for prof in res.levels:
+            out.append(row(f"runtime/profile/{label}/k{prof.k}",
+                           prof.parallel_seconds * 1e6, profile_meta(prof)))
     return out

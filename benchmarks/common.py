@@ -24,6 +24,28 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+def profile_meta(prof) -> str:
+    """One JobProfile as a benchmark meta string — the shared row format of
+    the cross-backend comparison table (sim / jax / sharded side by side)."""
+    parts = [
+        f"C={prof.n_candidates}",
+        f"F={prof.n_frequent}",
+        f"wall_ms={prof.seconds * 1e3:.1f}",
+        f"par_ms={prof.parallel_seconds * 1e3:.1f}",
+        f"seq_ms={prof.sequential_seconds * 1e3:.1f}",
+        f"gen_ms={prof.gen_seconds * 1e3:.1f}",
+        f"build_ms={prof.build_seconds * 1e3:.1f}",
+        f"enc_ms={prof.encode_seconds * 1e3:.1f}",
+        f"cnt_ms={prof.count_seconds * 1e3:.1f}",
+        f"red_ms={prof.reduce_seconds * 1e3:.1f}",
+    ]
+    if prof.mapper_seconds:
+        parts.append(f"mappers={len(prof.mapper_seconds)}")
+    if prof.inflight_depth:
+        parts.append(f"inflight={prof.inflight_depth}")
+    return ";".join(parts)
+
+
 def c2_wave(db, min_frac: float = 0.02):
     """One realistic C2 counting wave: dense-remap ``db``, take the frequent
     items at ``min_frac`` support, and join them into candidate pairs.

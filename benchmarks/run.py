@@ -42,6 +42,36 @@ def persist(suite: str, lines: list) -> str:
     return path
 
 
+def render_profile_table(lines: list) -> list:
+    """Pivot ``runtime/profile/<backend>/k<k>`` rows into one cross-backend
+    comparison table (backends x k, cell = parallel ms / measured wall ms).
+    Returned as '#'-prefixed lines: printed for humans, skipped by persist().
+    """
+    cells, ks = {}, set()
+    for line in lines:
+        if line.startswith("#") or not line.startswith("runtime/profile/"):
+            continue
+        name, us, meta = line.split(",", 2)
+        backend, k = name[len("runtime/profile/"):].rsplit("/k", 1)
+        wall = dict(p.split("=", 1) for p in meta.split(";") if "=" in p).get(
+            "wall_ms", "")
+        cells[(backend, int(k))] = f"{float(us) / 1e3:.0f}/{float(wall):.0f}"
+        ks.add(int(k))
+    if not cells:
+        return []
+    ks = sorted(ks)
+    backends = sorted({b for b, _ in cells})
+    width = max(len(b) for b in backends)
+    out = ["# cross-backend JobProfile table: parallel ms (model) / "
+           "measured wall ms, per level k",
+           "# " + "backend".ljust(width) + " | " +
+           " | ".join(f"k={k:<9}" for k in ks)]
+    for b in backends:
+        out.append("# " + b.ljust(width) + " | " + " | ".join(
+            f"{cells.get((b, k), '-'):<11}" for k in ks))
+    return out
+
+
 def main() -> None:
     from benchmarks import (
         bench_iterations,
@@ -70,6 +100,8 @@ def main() -> None:
         for line in fn():
             lines.append(line)
             print(line, flush=True)
+        for tline in render_profile_table(lines):
+            print(tline, flush=True)
         path = persist(name, lines)
         print(f"# suite {name} done in {time.time() - t0:.1f}s -> {path}",
               flush=True)

@@ -36,6 +36,26 @@ for runner in [
 print("runner parity smoke OK (sim == jax == sharded == brute force)")
 PY
 
+echo "== smoke: 2-D data x cand mesh parity (forced 8 host devices) =="
+# Candidate-axis sharding must be bit-identical to the replicated path; run
+# in a subprocess so XLA_FLAGS takes effect before jax initializes.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'PY'
+import numpy as np
+from repro.core import FrequentItemsetMiner, MapReduceEngine, ShardedRunner, \
+    brute_force_frequent
+from repro.data import quest_generator
+from repro.launch.mesh import make_data_cand_mesh
+
+db = quest_generator(n_transactions=150, avg_transaction_len=6, n_items=40,
+                     n_patterns=25, seed=11)
+oracle = brute_force_frequent(db, int(np.ceil(0.06 * len(db))))
+mesh = make_data_cand_mesh(2, 4)
+runner = ShardedRunner(store="packed_bitmap", mesh=mesh, cand_axes=("cand",))
+res = FrequentItemsetMiner(min_support=0.06, runner=runner).mine(db)
+assert res.itemsets == oracle, runner.describe()
+print("2-D mesh smoke OK (cand-sharded == brute force) on", runner.describe())
+PY
+
 echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
 

@@ -55,16 +55,24 @@ def run_mapreduce_apriori(
     n_mappers: int = 4,
     max_k: int = 16,
     child_max_size: int = 20,
+    executor=None,
 ) -> HadoopSimResult:
+    """``executor`` (None | "thread" | "process" | Executor) runs the
+    mappers concurrently instead of the sequential timed simulation — see
+    ``SimRunner``; counts are identical either way."""
     if structure not in SEQUENTIAL_STORES:
         raise ValueError(f"unknown structure {structure!r}")
     from repro.core.miner import FrequentItemsetMiner
 
     runner = SimRunner(structure=structure, n_mappers=n_mappers,
-                       child_max_size=child_max_size)
-    res = FrequentItemsetMiner(
-        min_support=min_support, strategy="spc", max_k=max_k, runner=runner,
-    ).mine(transactions)
+                       child_max_size=child_max_size, executor=executor)
+    try:
+        res = FrequentItemsetMiner(
+            min_support=min_support, strategy="spc", max_k=max_k,
+            runner=runner,
+        ).mine(transactions)
+    finally:
+        runner.close()
     return HadoopSimResult(
         structure=structure, n_mappers=n_mappers, min_count=res.min_count,
         iterations=res.levels, itemsets=res.itemsets,

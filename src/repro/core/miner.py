@@ -30,6 +30,10 @@ from repro.core.runtime import strategies
 # Back-compat alias: the old per-level stats type is the unified JobProfile.
 LevelStats = JobProfile
 
+# Distinguishes "inflight not configured" (default depth 1) from an explicit
+# inflight=None, which means auto-size the queue depth (engine semantics).
+_UNSET = object()
+
 
 @dataclasses.dataclass
 class MiningResult:
@@ -55,29 +59,35 @@ class FrequentItemsetMiner:
         strategy: str = "spc",
         mesh=None,
         data_axes: Optional[Tuple[str, ...]] = None,
+        cand_axes: Optional[Tuple[str, ...]] = None,
         max_k: int = 16,
         block_n: Optional[int] = None,
-        inflight: Optional[int] = None,
+        inflight=_UNSET,
         checkpoint_dir: Optional[str] = None,
         runner: Optional[BaseRunner] = None,
     ) -> None:
-        if runner is not None and any(
-            v is not None for v in (store, mesh, data_axes, block_n, inflight)
+        if runner is not None and (
+            any(v is not None
+                for v in (store, mesh, data_axes, cand_axes, block_n))
+            or inflight is not _UNSET
         ):
             # An explicit runner owns its backend config; silently ignoring
             # these would mine with a different setup than requested.
             raise ValueError(
                 "pass backend config either through runner= or through "
-                "store/mesh/data_axes/block_n/inflight — not both"
+                "store/mesh/data_axes/cand_axes/block_n/inflight — not both"
             )
         self.min_support = min_support
         self.store = store if store is not None else "perfect_hash"
         self.strategy = strategy
         self.mesh = mesh
         self.data_axes = data_axes if data_axes is not None else ("data",)
+        self.cand_axes = cand_axes if cand_axes is not None else ()
         self.max_k = max_k
         self.block_n = block_n if block_n is not None else 2048
-        self.inflight = inflight if inflight is not None else 1
+        # inflight=None passes through to the engine as "auto-size the
+        # async queue depth"; unset means the fixed default of 1.
+        self.inflight = 1 if inflight is _UNSET else inflight
         self.checkpoint_dir = checkpoint_dir
         self.runner = runner
 
@@ -85,8 +95,8 @@ class FrequentItemsetMiner:
         if self.runner is not None:
             return self.runner
         return make_runner(store=self.store, mesh=self.mesh,
-                           data_axes=self.data_axes, block_n=self.block_n,
-                           inflight=self.inflight)
+                           data_axes=self.data_axes, cand_axes=self.cand_axes,
+                           block_n=self.block_n, inflight=self.inflight)
 
     def _config(self, runner: BaseRunner) -> dict:
         """The run configuration stamped into checkpoints; a checkpoint from

@@ -15,8 +15,11 @@ chunks, in-chunk combiner, global reducer.  This package owns that shape:
 
 ``runners.py``
     The three execution backends behind one interface: ``SimRunner`` (the
-    paper's Hadoop cost model over the Java-equivalent stores), ``JaxRunner``
-    (single device) and ``ShardedRunner`` (mesh + shard_map).
+    paper's Hadoop cost model over the Java-equivalent stores, with an
+    optional ``executor=`` thread/process pool for measured concurrency),
+    ``JaxRunner`` (single device) and ``ShardedRunner`` (mesh + shard_map,
+    with optional ``cand_axes`` candidate-axis sharding for the 2-D
+    ``data x cand`` work decomposition).
 
 ``strategies.py``
     The level-wise wave schedulers (SPC/FPC/DPC), threaded through the

@@ -10,6 +10,20 @@ each level's candidate arrays are replicated — the analogue of Hadoop's
 distributed cache shipping L_{k-1} to every mapper. A new candidate shape
 triggers one compile, the analogue of per-iteration job submission.
 
+**Candidate-axis sharding** (``cand_axes``): with a 2-D ``data x cand`` mesh
+the work decomposition becomes a true grid — transactions shard over the
+``data`` axes (replicated over ``cand``) and each wave's candidate tensors
+shard over the ``cand`` axes (replicated over ``data``), so a wave whose
+candidate tensors are too big to replicate per device fits in
+``1/n_cand_shards`` of the memory. Each device counts its candidate shard
+over its transaction shard; counts are psum'd along ``data`` and the
+per-candidate-shard vectors are stitched back to the full ``C`` axis by the
+``out_specs`` partition (the mesh-level allgather along ``cand``) — pure
+integer adds and concatenation, so counts stay bit-identical to the
+replicated path. Per-store candidate layouts (row-major, word-major
+transposed, ...) declare which axis carries ``C`` via
+``candidate_shard_axes()``.
+
 Per wave, only the small (C, k) int32 candidate matrix crosses the host
 boundary; the store-specific candidate tensors (k-hot rows, packed words,
 bucket hashes) are built on device by the store's jit'd ``encode_candidates``.
@@ -32,6 +46,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import time
 
 from typing import Deque, List, Optional, Tuple
 
@@ -84,19 +99,38 @@ class MapReduceEngine:
         store: str = "perfect_hash",
         mesh: Optional[Mesh] = None,
         data_axes: Tuple[str, ...] = ("data",),
+        cand_axes: Tuple[str, ...] = (),
         block_n: int = 2048,
         cand_block: int = 32_768,
-        inflight: int = 1,
+        inflight: Optional[int] = 1,
     ) -> None:
         if store not in ARRAY_STORES:
             raise ValueError(f"unknown store {store!r}; pick from {list(ARRAY_STORES)}")
+        if cand_axes and mesh is None:
+            raise ValueError("cand_axes requires a mesh with those axes")
+        if mesh is not None:
+            # Fail at construction, not with a KeyError inside the first
+            # count: every named axis must exist on the mesh (passing
+            # cand_axes with a data-only mesh is the easy mistake).
+            missing = [a for a in tuple(data_axes) + tuple(cand_axes)
+                       if a not in mesh.shape]
+            if missing:
+                raise ValueError(
+                    f"mesh has axes {list(mesh.shape)}, missing {missing}"
+                )
         self.store = ARRAY_STORES[store]
         self.store_name = store
         self.mesh = mesh
         self.data_axes = data_axes
+        self.cand_axes = tuple(cand_axes)
         self.block_n = block_n
         self.cand_block = cand_block  # bounds per-dispatch candidate memory
-        self.inflight = inflight      # max un-fetched chunk dispatches queued
+        # inflight=None => auto: pick the depth from the first clean chunk's
+        # measured device latency vs host dispatch time (see
+        # count_candidates_async); until tuned, run classic double buffering.
+        self.inflight_auto = inflight is None
+        self._inflight_tuned = False
+        self.inflight = 1 if inflight is None else inflight
         self._trans_device = None
         self._enc: Optional[EncodedDB] = None
         self._count_jit = None
@@ -111,6 +145,19 @@ class MapReduceEngine:
         if self.mesh is None:
             return 1
         return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def n_cand_shards(self) -> int:
+        if self.mesh is None or not self.cand_axes:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.cand_axes]))
+
+    def _cand_pspec(self, axis: Optional[int]) -> P:
+        """PartitionSpec sharding dimension ``axis`` (the tensor's C axis)
+        over the cand mesh axes; replicated when cand sharding is off."""
+        if not self.cand_axes or axis is None:
+            return P()
+        return P(*([None] * axis), self.cand_axes)
 
     def place(self, enc: EncodedDB) -> None:
         """Shard transaction tensors over the data axes; keep them resident."""
@@ -154,6 +201,11 @@ class MapReduceEngine:
             partial = partial + body(tail)
         return partial
 
+    def _cand_specs(self, cands_example: dict) -> dict:
+        """Per-tensor candidate PartitionSpecs from the store's layout map."""
+        axes_map = self.store.candidate_shard_axes() if self.cand_axes else {}
+        return {k: self._cand_pspec(axes_map.get(k)) for k in cands_example}
+
     def _build_count_fn(self, cands_example: dict):
         if self.mesh is None:
             return jax.jit(self._blocked_count)
@@ -164,14 +216,18 @@ class MapReduceEngine:
             local = self._blocked_count(trans, cands)
             return jax.lax.psum(local, self.data_axes)  # shuffle + reduce
 
+        # With candidate sharding each device returns counts for its C-shard
+        # only; out_specs partitions the result over ``cand``, stitching the
+        # shards back into the full C axis (the mesh-level allgather). The
+        # psum makes the result provably replicated over ``data`` either way.
         fn = _shard_map(
             sharded,
             mesh=self.mesh,
             in_specs=(
                 jax.tree.map(lambda _: data_spec, self._trans_device),
-                jax.tree.map(lambda _: P(), cands_example),
+                self._cand_specs(cands_example),
             ),
-            out_specs=P(),
+            out_specs=P(self.cand_axes) if self.cand_axes else P(),
         )
         return jax.jit(fn)
 
@@ -179,14 +235,17 @@ class MapReduceEngine:
     def _dispatch_chunk(self, chunk: np.ndarray):
         """Encode + dispatch one candidate chunk; returns the *unfetched*
         device counts (JAX async dispatch — nothing here blocks on compute)."""
-        cand_p = pad_candidates(chunk, self._enc.f_pad)
+        cand_p = pad_candidates(chunk, self._enc.f_pad,
+                                shards=self.n_cand_shards)
         cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
         if self.mesh is not None:
             rep = NamedSharding(self.mesh, P())
             cand_dev = jax.device_put(cand_dev, rep)
         cands = self._encode_jit(cand_dev)
         if self.mesh is not None:
-            cands = {k: jax.device_put(v, rep) for k, v in cands.items()}
+            specs = self._cand_specs(cands)
+            cands = {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                     for k, v in cands.items()}
         if self._count_jit is None:
             self._count_jit = self._build_count_fn(cands)
         return self._count_jit(self._trans_device, cands)
@@ -217,11 +276,46 @@ class MapReduceEngine:
         pending = PendingCounts(self, len(starts))
         for slot, i in enumerate(starts):
             chunk = cand[i : i + self.cand_block]
+            if (self.inflight_auto and not self._inflight_tuned
+                    and slot == 1 and chunk.shape[0] == self.cand_block):
+                self._tune_inflight(pending, slot, chunk)
+                continue
             dev = self._dispatch_chunk(chunk)
             self._queue.append((pending, slot, dev, chunk.shape[0]))
             while len(self._queue) > self.inflight:
                 self._force_oldest()
         return pending
+
+    def _tune_inflight(self, pending: PendingCounts, slot: int,
+                       chunk: np.ndarray) -> None:
+        """Auto-size the queue depth (``inflight=None``): depth = how many
+        chunks the host can submit while one completes on device, i.e.
+        device completion latency / host dispatch time, clamped to [1, 8].
+
+        Sampling rules keep the measurement honest: a wave's first chunk
+        pays jit compilation, so the sample is the wave's *second* chunk,
+        and only when it is full ``cand_block`` size (a ragged tail chunk
+        has a different padded shape and would recompile inside the sample).
+        Until a clean sample arrives the engine runs at the classic
+        double-buffering depth of 1 — single-chunk waves never tune and
+        simply stay at depth 1, where the queue depth is moot.  Counts are
+        bit-identical at any depth, so tuning never changes results, only
+        waiting.
+        """
+        # Drain outstanding work first so the sampled chunk is not queued
+        # behind a prior dispatch (one-off: only the tuning wave pays this).
+        while self._queue:
+            self._force_oldest()
+        t0 = time.perf_counter()
+        dev = self._dispatch_chunk(chunk)
+        submit_s = time.perf_counter() - t0
+        self._queue.append((pending, slot, dev, chunk.shape[0]))
+        t0 = time.perf_counter()
+        self._force_oldest()
+        wait_s = time.perf_counter() - t0
+        self.inflight = int(np.clip(
+            round(wait_s / max(submit_s, 1e-6)), 1, 8))
+        self._inflight_tuned = True
 
     def count_candidates(self, cand: np.ndarray) -> np.ndarray:
         """Blocking wrapper: (C, k) candidate matrix -> int64[C] counts."""

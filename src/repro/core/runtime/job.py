@@ -22,7 +22,14 @@ Phase fields (seconds; a backend leaves phases it does not have at 0.0):
 
 ``mapper_seconds`` keeps the simulator's per-mapper wall clocks so its
 max-mapper parallel-time model (``parallel_seconds``) survives unification;
-JAX jobs leave it empty, making ``parallel_seconds == seconds``.
+JAX jobs leave it empty, making ``parallel_seconds == seconds``.  When the
+simulator runs its mappers on a real executor pool, ``seconds`` is measured
+concurrent wall time and ``parallel_seconds`` stays the model — comparing
+the two per job validates the ``max(mappers) + reduce`` cost model.
+
+``inflight_depth`` records the async dispatch queue depth the engine-backed
+runners actually ran with — the auto-sized depth when the engine was built
+with ``inflight=None``; 0 on runners without a dispatch queue (simulator).
 """
 
 from __future__ import annotations
@@ -45,6 +52,7 @@ class JobProfile:
     count_seconds: float = 0.0
     reduce_seconds: float = 0.0
     mapper_seconds: List[float] = dataclasses.field(default_factory=list)
+    inflight_depth: int = 0     # effective async queue depth (engine runners)
 
     @property
     def parallel_seconds(self) -> float:

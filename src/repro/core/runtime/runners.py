@@ -11,16 +11,23 @@ A runner owns job execution only — drivers own *what* to count, runners own
                            ``result()`` -> (int64[C] counts, JobProfile).
 
 ``SimRunner`` absorbs the Job1/Job2 mapper loops of the old
-``core.hadoop_sim`` driver: mappers are executed sequentially but timed
-individually, every Job2 mapper re-runs apriori-gen and rebuilds its
-candidate structure (the paper's per-iteration fixed cost), and the profile
-keeps per-mapper wall clocks so ``JobProfile.parallel_seconds`` reproduces
-the ``max(mappers) + reduce`` cluster model.
+``core.hadoop_sim`` driver: every Job2 mapper re-runs apriori-gen and
+rebuilds its candidate structure (the paper's per-iteration fixed cost), and
+the profile keeps per-mapper wall clocks so ``JobProfile.parallel_seconds``
+reproduces the ``max(mappers) + reduce`` cluster model.  By default mappers
+run sequentially (timed individually — the single-core cost model); the
+``executor=`` knob runs them on a real ``concurrent.futures`` thread or
+process pool instead, so the simulated parallel time can be validated
+against measured concurrent wall time (``JobProfile.seconds``).  Partial
+counts are merged in mapper-slot order either way, so pooled counts are
+exactly the sequential counts.
 
 ``JaxRunner``/``ShardedRunner`` share the ``MapReduceEngine`` counting core;
 their ``count_async`` is genuinely asynchronous (double-buffered chunk
 dispatch), letting the strategy overlap host-side candidate generation with
-device counting.
+device counting.  ``ShardedRunner`` additionally takes ``cand_axes`` for the
+2-D work decomposition: transactions shard over ``data`` while each wave's
+candidate tensors shard over ``cand`` instead of being replicated.
 """
 
 from __future__ import annotations
@@ -39,11 +46,66 @@ from repro.core.stores.base import ITEM_PAD
 
 
 def _chunks(transactions: Sequence[Sequence[int]], n_mappers: int):
+    """Split the DB into exactly ``n_mappers`` input splits (np.array_split
+    semantics: sizes differ by at most one, empty splits allowed).
+
+    The old ceil-size slicing could leave mapper slots empty (5 transactions
+    over 4 mappers -> 3 chunks of 2/2/1) while the empty-DB branch scheduled
+    all ``n_mappers`` slots — skewing ``JobProfile.parallel_seconds``, which
+    models an m-slot cluster and needs every slot represented.
+    """
     n = len(transactions)
-    if n == 0:  # degenerate DB still schedules every mapper slot (empty splits)
-        return [[] for _ in range(n_mappers)]
-    size = (n + n_mappers - 1) // n_mappers
-    return [transactions[i : i + size] for i in range(0, n, size)]
+    base, extra = divmod(n, n_mappers)
+    out, start = [], 0
+    for i in range(n_mappers):
+        size = base + (1 if i < extra else 0)
+        out.append(transactions[start : start + size])
+        start += size
+    return out
+
+
+# -- mapper bodies ----------------------------------------------------------
+# Module-level functions (not methods) so a process-pool executor can pickle
+# them; each returns its own phase timings measured inside the worker.
+
+def _job1_mapper(chunk) -> Tuple[Dict[int, int], float]:
+    """OneItemsetMapper + in-chunk combiner (Algorithm 2)."""
+    t0 = time.perf_counter()
+    local: Dict[int, int] = {}
+    for t in chunk:
+        for item in set(t):
+            local[int(item)] = local.get(int(item), 0) + 1  # combiner folded in
+    return local, time.perf_counter() - t0
+
+
+def _job2_mapper(chunk, store_cls, structure: str, child_max_size: int,
+                 level, cand_rows):
+    """One Job2 mapper (Algorithm 3): gen + build + chunk count, phase-timed.
+
+    ``level is not None``: the mapper re-generates C_k from the cached
+    L_{k-1} and builds its own structure — the paper's per-mapper fixed
+    cost.  ``level is None`` (speculative FPC/DPC wave): C_k ships via
+    distributed cache and only the structure build is paid.
+    """
+    t0 = time.perf_counter()
+    if level is not None:
+        _, store, gen_s, build_s = _generate_and_build(
+            store_cls, structure, level, child_max_size
+        )
+    else:
+        gen_s = 0.0
+        t1 = time.perf_counter()
+        if structure == "hash_tree":
+            store = store_cls(cand_rows, child_max_size=child_max_size)
+        else:
+            store = store_cls(cand_rows)
+        build_s = time.perf_counter() - t1
+    t1 = time.perf_counter()
+    for t in chunk:
+        store.count_transaction(t)
+    local = {s: c for s, c in store.counts().items() if c > 0}
+    count_s = time.perf_counter() - t1
+    return local, gen_s, build_s, count_s, time.perf_counter() - t0
 
 
 def _generate_and_build(store_cls, structure: str, level, child_max_size: int):
@@ -107,26 +169,79 @@ class BaseRunner:
 
 
 class SimRunner(BaseRunner):
-    """The paper's Hadoop cluster cost model over the Java-equivalent stores."""
+    """The paper's Hadoop cluster cost model over the Java-equivalent stores.
+
+    ``executor=None`` (default) runs mappers sequentially, timed individually
+    — the simulated cluster.  ``executor="thread"`` / ``"process"`` runs each
+    job's mappers concurrently on a ``concurrent.futures`` pool of
+    ``n_mappers`` workers (a caller-owned ``Executor`` instance is also
+    accepted), so ``JobProfile.seconds`` becomes *measured* concurrent wall
+    time while ``parallel_seconds`` keeps the ``max(mappers) + reduce``
+    model — the two are directly comparable per job.  Counts are identical
+    in every mode: partials merge in mapper-slot order.
+    """
 
     kind = "sim"
     supports_async = False
 
     def __init__(self, structure: str = "trie", n_mappers: int = 4,
-                 child_max_size: int = 20) -> None:
+                 child_max_size: int = 20, executor=None) -> None:
         if structure not in SEQUENTIAL_STORES:
             raise ValueError(f"unknown structure {structure!r}")
+        if isinstance(executor, str) and executor not in ("thread", "process"):
+            raise ValueError(
+                f"unknown executor {executor!r}; pick 'thread', 'process', "
+                "None, or pass a concurrent.futures.Executor"
+            )
         self.structure = structure
         self.store_cls = SEQUENTIAL_STORES[structure]
         self.n_mappers = n_mappers
         self.child_max_size = child_max_size
+        self.executor = executor
+        self._pool = None
+        self._owns_pool = False
         self._raw: Optional[Sequence[Sequence[int]]] = None
         self._chunks_raw: Optional[List[Sequence[Sequence[int]]]] = None
         self._item_map: Optional[np.ndarray] = None
         self._n_raw = 0
 
     def describe(self) -> str:
-        return f"sim/{self.structure}/m{self.n_mappers}"
+        base = f"sim/{self.structure}/m{self.n_mappers}"
+        if self.executor is None:
+            return base
+        mode = self.executor if isinstance(self.executor, str) else "pool"
+        return f"{base}+{mode}"
+
+    # -- mapper execution: sequential loop or real concurrency --------------
+    def _ensure_pool(self):
+        if self._pool is None:
+            import concurrent.futures as cf
+
+            if self.executor == "thread":
+                self._pool = cf.ThreadPoolExecutor(max_workers=self.n_mappers)
+                self._owns_pool = True
+            elif self.executor == "process":
+                self._pool = cf.ProcessPoolExecutor(max_workers=self.n_mappers)
+                self._owns_pool = True
+            else:
+                self._pool = self.executor
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down a pool this runner created (no-op otherwise)."""
+        if self._owns_pool and self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+            self._owns_pool = False
+
+    def _map(self, fn, tasks: List[tuple]) -> List:
+        """Run one job's mapper wave; results come back in mapper-slot order
+        (futures gathered in submission order), so the reduce merge — and
+        therefore every count — is independent of executor scheduling."""
+        if self.executor is None:
+            return [fn(*args) for args in tasks]
+        pool = self._ensure_pool()
+        return [f.result() for f in [pool.submit(fn, *args) for args in tasks]]
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
         self._raw = transactions
@@ -137,16 +252,11 @@ class SimRunner(BaseRunner):
     # -- Job1: OneItemsetMapper + combiner + reducer (Algorithm 2) ----------
     def job1(self) -> Tuple[np.ndarray, JobProfile]:
         t_job = time.perf_counter()
-        mapper_times: List[float] = []
-        partials: List[Dict[int, int]] = []
-        for chunk in _chunks(self._raw, self.n_mappers):
-            t0 = time.perf_counter()
-            local: Dict[int, int] = {}
-            for t in chunk:
-                for item in set(t):
-                    local[int(item)] = local.get(int(item), 0) + 1  # combiner folded in
-            mapper_times.append(time.perf_counter() - t0)
-            partials.append(local)
+        results = self._map(
+            _job1_mapper, [(c,) for c in _chunks(self._raw, self.n_mappers)]
+        )
+        partials = [local for local, _ in results]
+        mapper_times = [sec for _, sec in results]
         t0 = time.perf_counter()
         hist = np.zeros((self._n_raw,), np.int64)
         for local in partials:
@@ -182,38 +292,16 @@ class SimRunner(BaseRunner):
                                     if job.cand.size else job.cand)
         level = matrix_to_level(self._item_map[job.level]) if (
             job.level is not None and job.level.size) else None
-        mapper_times: List[float] = []
-        gen_times: List[float] = []
-        build_times: List[float] = []
-        count_times: List[float] = []
-        partials: List[Dict[Itemset, int]] = []
-        for chunk in self._chunks_raw:
-            t0 = time.perf_counter()
-            if level is not None:
-                # Every mapper re-generates C_k from the cached L_{k-1} and
-                # builds its own structure — the paper's per-mapper fixed cost.
-                _, store, gen_s, build_s = _generate_and_build(
-                    self.store_cls, self.structure, level, self.child_max_size
-                )
-            else:
-                # Speculative wave (FPC/DPC): C_k ships via distributed cache.
-                gen_s = 0.0
-                t1 = time.perf_counter()
-                if self.structure == "hash_tree":
-                    store = self.store_cls(cand_rows,
-                                           child_max_size=self.child_max_size)
-                else:
-                    store = self.store_cls(cand_rows)
-                build_s = time.perf_counter() - t1
-            t1 = time.perf_counter()
-            for t in chunk:
-                store.count_transaction(t)
-            local = {s: c for s, c in store.counts().items() if c > 0}
-            count_times.append(time.perf_counter() - t1)
-            gen_times.append(gen_s)
-            build_times.append(build_s)
-            mapper_times.append(time.perf_counter() - t0)
-            partials.append(local)
+        results = self._map(_job2_mapper, [
+            (chunk, self.store_cls, self.structure, self.child_max_size,
+             level, cand_rows)
+            for chunk in self._chunks_raw
+        ])
+        partials = [local for local, _, _, _, _ in results]
+        gen_times = [g for _, g, _, _, _ in results]
+        build_times = [b for _, _, b, _, _ in results]
+        count_times = [c for _, _, _, c, _ in results]
+        mapper_times = [m for _, _, _, _, m in results]
         t0 = time.perf_counter()
         index = {s: i for i, s in enumerate(cand_rows)}
         counts = np.zeros((len(cand_rows),), np.int64)
@@ -252,6 +340,7 @@ class _JaxPending:
             k=self._job.k, n_candidates=self._job.n_candidates,
             seconds=self._encode_s + wait_s,
             encode_seconds=self._encode_s, count_seconds=wait_s,
+            inflight_depth=self._runner.engine.inflight,
         )
         return counts, prof
 
@@ -268,17 +357,23 @@ class JaxRunner(BaseRunner):
         return self.engine.inflight > 0
 
     def __init__(self, store: str = "perfect_hash", block_n: int = 2048,
-                 cand_block: int = 32_768, inflight: int = 1,
-                 mesh=None, data_axes: Tuple[str, ...] = ("data",)) -> None:
+                 cand_block: int = 32_768, inflight: Optional[int] = 1,
+                 mesh=None, data_axes: Tuple[str, ...] = ("data",),
+                 cand_axes: Tuple[str, ...] = ()) -> None:
+        # inflight=None => auto-size the queue depth from the first clean
+        # chunk's measured device latency vs host dispatch time (engine).
         self.engine = MapReduceEngine(
-            store=store, mesh=mesh, data_axes=data_axes,
+            store=store, mesh=mesh, data_axes=data_axes, cand_axes=cand_axes,
             block_n=block_n, cand_block=cand_block, inflight=inflight,
         )
         self._padded_raw: Optional[np.ndarray] = None
         self._n_raw = 0
 
     def describe(self) -> str:
-        return f"{self.kind}/{self.engine.store_name}"
+        base = f"{self.kind}/{self.engine.store_name}"
+        if self.engine.cand_axes:
+            base += f"/c{self.engine.n_cand_shards}"
+        return base
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
         # The single host pass over the raw lists; everything downstream
@@ -306,7 +401,11 @@ class JaxRunner(BaseRunner):
         dense = lookup[np.minimum(padded, n_raw)]  # infrequent/pad -> ITEM_PAD
         dense.sort(axis=1)  # rows stay unique-sorted; ITEM_PAD collects at end
         width = int((dense < ITEM_PAD).sum(axis=1).max()) if dense.size else 0
-        width = max(8, width)
+        # Clamp to a lane-friendly minimum, but never past the actual column
+        # count — max(8, width) alone promises 8 columns the slice below
+        # cannot deliver when the matrix is narrower (all-infrequent or
+        # single-item DBs), leaving downstream shapes out of sync.
+        width = min(dense.shape[1], max(8, width))
         dense = np.ascontiguousarray(dense[:, :width])
         self.engine.place(encode_db_from_padded(dense, n_items=f))
 
@@ -318,26 +417,38 @@ class JaxRunner(BaseRunner):
 
 class ShardedRunner(JaxRunner):
     """Mesh-parallel runner: transactions sharded over the data axes,
-    per-shard counts psum-reduced (shard_map) — the cluster path."""
+    per-shard counts psum-reduced (shard_map) — the cluster path.
+
+    ``cand_axes`` switches the wave decomposition to the full 2-D grid: the
+    candidate tensors of each wave shard over the ``cand`` mesh axes instead
+    of replicating, so C_k waves too big for one device's memory fit (at
+    ``1/n_cand_shards`` per device); per-shard counts are psum'd along
+    ``data`` and stitched along ``cand``, bit-identical to replication.
+    Build the mesh with ``repro.launch.mesh.make_data_cand_mesh``.
+    """
 
     kind = "sharded"
 
     def __init__(self, store: str = "perfect_hash", mesh=None,
-                 data_axes: Tuple[str, ...] = ("data",), block_n: int = 2048,
-                 cand_block: int = 32_768, inflight: int = 1) -> None:
+                 data_axes: Tuple[str, ...] = ("data",),
+                 cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
+                 cand_block: int = 32_768, inflight: Optional[int] = 1) -> None:
         if mesh is None:
-            from repro.launch.mesh import make_data_mesh
+            from repro.launch.mesh import make_data_cand_mesh, make_data_mesh
 
-            mesh = make_data_mesh()
+            mesh = make_data_cand_mesh() if cand_axes else make_data_mesh()
         super().__init__(store=store, block_n=block_n, cand_block=cand_block,
-                         inflight=inflight, mesh=mesh, data_axes=data_axes)
+                         inflight=inflight, mesh=mesh, data_axes=data_axes,
+                         cand_axes=cand_axes)
 
 
 def make_runner(store: str = "perfect_hash", mesh=None,
-                data_axes: Tuple[str, ...] = ("data",), block_n: int = 2048,
-                inflight: int = 1) -> BaseRunner:
+                data_axes: Tuple[str, ...] = ("data",),
+                cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
+                inflight: Optional[int] = 1) -> BaseRunner:
     """Default runner selection for drivers: mesh => sharded, else single."""
-    if mesh is not None:
+    if mesh is not None or cand_axes:
         return ShardedRunner(store=store, mesh=mesh, data_axes=data_axes,
-                             block_n=block_n, inflight=inflight)
+                             cand_axes=cand_axes, block_n=block_n,
+                             inflight=inflight)
     return JaxRunner(store=store, block_n=block_n, inflight=inflight)

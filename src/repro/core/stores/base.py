@@ -126,11 +126,19 @@ def encode_db(
     return encode_db_from_padded(padded, n_items=n_items, align=align)
 
 
-def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128) -> np.ndarray:
+def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128,
+                   shards: int = 1) -> np.ndarray:
     """Pad the candidate count C up to ``align``; pad rows point at the
-    always-zero bitmap column so they can never be matched."""
+    always-zero bitmap column so they can never be matched.
+
+    ``shards`` > 1 (candidate-axis sharding) additionally rounds C up to a
+    multiple of the shard count so the padded matrix splits evenly over the
+    ``cand`` mesh axes; the extra rows are the same unmatchable pads.
+    """
     c, k = cand.shape if cand.size else (0, 1)
     c_pad = max(align, ((c + align - 1) // align) * align)
+    if shards > 1:
+        c_pad = ((c_pad + shards - 1) // shards) * shards
     out = np.full((c_pad, k), f_pad - 1, dtype=np.int32)
     if cand.size:
         out[:c] = cand

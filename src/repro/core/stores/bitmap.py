@@ -49,6 +49,11 @@ class BitmapMXUStore:
         khot = jnp.zeros((c, f_pad), jnp.float32).at[rows, cand.reshape(-1)].add(1.0)
         return {"khot": khot, "kvec": jnp.full((c,), k, jnp.int32)}
 
+    @staticmethod
+    def candidate_shard_axes() -> dict:
+        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        return {"khot": 0, "kvec": 0}
+
     @classmethod
     def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:
         if cls.use_kernel:

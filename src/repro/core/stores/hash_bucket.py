@@ -32,6 +32,11 @@ class HashBucketStore:
         bucket = (cand[:, 0] % cls.child_max_size).astype(jnp.int32)
         return {"cand": cand, "cand_bucket": bucket}
 
+    @staticmethod
+    def candidate_shard_axes() -> dict:
+        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        return {"cand": 0, "cand_bucket": 0}
+
     @classmethod
     def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:
         bitmap, t_hash = trans["bitmap"], trans["t_hash"]

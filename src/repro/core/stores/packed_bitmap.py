@@ -62,6 +62,15 @@ class PackedBitmapStore:
         return {**body, "kvec": jnp.full((c,), k, jnp.int32)}
 
     @classmethod
+    def candidate_shard_axes(cls) -> dict:
+        """Tensor name -> axis carrying C (for candidate-axis sharding).
+
+        The jnp path materializes the word-major transpose, so its C axis is
+        axis 1; the kernel path keeps row-major (C, W)."""
+        body = {"packed": 0} if cls.use_kernel else {"packedT": 1}
+        return {**body, "kvec": 0}
+
+    @classmethod
     def count_block(cls, trans: dict, cands: dict) -> jnp.ndarray:
         if cls.use_kernel:
             from repro.kernels.support_count import packed_support_count

@@ -27,6 +27,11 @@ class PerfectHashStore:
         return {"cand": cand}
 
     @staticmethod
+    def candidate_shard_axes() -> dict:
+        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        return {"cand": 0}
+
+    @staticmethod
     def count_block(trans: dict, cands: dict) -> jnp.ndarray:
         """trans["bitmap"]: (Nb, F_pad) uint8; cands["cand"]: (C, k) -> int32[C]."""
         bitmap, cand = trans["bitmap"], cands["cand"]

@@ -27,6 +27,11 @@ class SortedPrefixStore:
         return {"cand": cand}
 
     @staticmethod
+    def candidate_shard_axes() -> dict:
+        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        return {"cand": 0}
+
+    @staticmethod
     def count_block(trans: dict, cands: dict) -> jnp.ndarray:
         """trans["padded"]: (Nb, L) sorted int32 (ITEM_PAD tail); cand (C, k)."""
         padded, cand = trans["padded"], cands["cand"]

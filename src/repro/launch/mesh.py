@@ -32,6 +32,28 @@ def make_data_mesh(n_shards=None):
     return compat_make_mesh((n,), ("data",))
 
 
+def make_data_cand_mesh(n_data=None, n_cand=None):
+    """2-D ``data x cand`` mesh for candidate-axis sharding: transactions
+    shard over ``data`` (replicated over ``cand``), each counting wave's
+    candidate tensors shard over ``cand`` (replicated over ``data``).
+
+    With no sizes given, ``cand`` takes the largest power of two not above
+    sqrt(device_count) that divides it (8 devices -> 4x2 data x cand), so
+    both the transaction and the candidate axis get parallelism.
+    """
+    total = jax.device_count()
+    if n_cand is None:
+        if n_data is not None:
+            n_cand = max(1, total // n_data)
+        else:
+            n_cand = 1
+            while n_cand * 2 * n_cand * 2 <= total and total % (n_cand * 2) == 0:
+                n_cand *= 2
+    if n_data is None:
+        n_data = max(1, total // n_cand)
+    return compat_make_mesh((n_data, n_cand), ("data", "cand"))
+
+
 def make_host_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist (tests / single host)."""
     n = jax.device_count()

@@ -1,10 +1,13 @@
 """Unified job runtime: runner parity across backends, async double-buffered
-wave determinism, device-side Job1, degenerate DBs, checkpoint config stamp."""
+wave determinism, candidate-axis sharding, executor-pooled SimRunner,
+device-side Job1, degenerate DBs, checkpoint config stamp."""
 
+import jax
 import numpy as np
 import pytest
 
 from repro.core import (
+    CountJob,
     FrequentItemsetMiner,
     JobProfile,
     MapReduceEngine,
@@ -13,8 +16,9 @@ from repro.core import (
 )
 from repro.core.itemsets import level_to_matrix
 from repro.core.runtime import JaxRunner, ShardedRunner, SimRunner
+from repro.core.runtime.runners import _chunks
 from repro.core.sequential import SEQUENTIAL_STORES
-from repro.core.stores import ARRAY_STORES, encode_db
+from repro.core.stores import ARRAY_STORES, encode_db, pad_candidates
 from repro.data import quest_generator
 from repro.launch.mesh import compat_make_mesh
 
@@ -72,6 +76,57 @@ def test_both_drivers_emit_job_profiles(t10_db):
     # ... and both report through the same per-phase schema.
     assert any(it.count_seconds > 0 for it in sim.iterations)
     assert any(lv.count_seconds > 0 for lv in jax_res.levels)
+
+
+# -- mapper input splits ----------------------------------------------------
+@pytest.mark.parametrize("n,m", [(5, 4), (2, 5), (7, 3), (0, 3), (12, 5),
+                                 (1, 4), (8, 4)])
+def test_chunks_fills_every_mapper_slot(n, m):
+    """np.array_split semantics: exactly m splits, sizes differing by at most
+    one, order preserved — the old ceil-size slicing dropped slots (5/4 -> 3
+    chunks), skewing the max-mapper parallel model."""
+    chunks = _chunks(list(range(n)), m)
+    assert len(chunks) == m
+    assert [x for c in chunks for x in c] == list(range(n))
+    sizes = [len(c) for c in chunks]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_sim_profiles_cover_every_mapper_slot():
+    """The uneven-split regression end-to-end: 5 transactions over 4 mappers
+    must still time 4 mapper slots in every job profile."""
+    db = [[0, 1], [0, 1], [0, 2], [1, 2], [0, 1, 2]]
+    runner = SimRunner(structure="trie", n_mappers=4)
+    res = FrequentItemsetMiner(min_support=0.2, runner=runner).mine(db)
+    assert res.itemsets == brute_force_frequent(db, 1)
+    assert all(len(p.mapper_seconds) == 4 for p in res.levels)
+
+
+# -- executor-pooled SimRunner ----------------------------------------------
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_sim_runner_pool_matches_sequential(t10_db, oracle, executor):
+    """Pooled mappers reproduce the sequential counts exactly (itemsets AND
+    counts) and still report one wall clock per mapper slot."""
+    runner = SimRunner(structure="trie", n_mappers=3, executor=executor)
+    try:
+        res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                                   runner=runner).mine(t10_db)
+    finally:
+        runner.close()
+    assert res.itemsets == oracle
+    assert all(len(p.mapper_seconds) == 3 for p in res.levels)
+    assert "+" + executor in runner.describe()
+
+
+def test_sim_runner_rejects_unknown_executor():
+    with pytest.raises(ValueError, match="executor"):
+        SimRunner(structure="trie", executor="celery")
+
+
+def test_hadoop_sim_executor_passthrough(t10_db, oracle):
+    res = run_mapreduce_apriori(t10_db, MIN_SUPPORT, structure="trie",
+                                n_mappers=3, executor="thread")
+    assert res.itemsets == oracle
 
 
 # -- async double-buffered wave dispatch -----------------------------------
@@ -159,6 +214,147 @@ def test_job1_device_sharded(t10_db):
     hist, _ = runner.job1()
     np.testing.assert_array_equal(
         hist, MapReduceEngine.count_items(t10_db, runner.n_raw_items))
+
+
+# -- place() width clamp ----------------------------------------------------
+def test_place_width_clamp_narrow_matrix():
+    """place() on a dense matrix narrower than the 8-column lane clamp must
+    slice only what exists — max(8, width) alone announced 8 columns while
+    the slice silently delivered fewer."""
+    runner = JaxRunner(store="perfect_hash")
+    runner.ingest([[0], [0], [1]])
+    runner._padded_raw = runner._padded_raw[:, :2]  # force the narrow edge
+    runner.place(np.array([0, 1]))
+    assert runner.engine._enc.padded.shape[1] == 2
+    counts, _ = runner.count(CountJob(k=1, cand=np.array([[0], [1]], np.int32)))
+    np.testing.assert_array_equal(counts, [2, 1])
+
+
+@pytest.mark.parametrize("runner_idx", range(3))
+def test_mine_single_item_db(runner_idx):
+    """One distinct item total: the dense matrix is as narrow as it gets."""
+    runner = _all_runners()[runner_idx]
+    db = [[5]] * 4
+    res = FrequentItemsetMiner(min_support=0.5, runner=runner).mine(db)
+    assert res.itemsets == {(5,): 4}
+
+
+# -- auto-sized inflight ----------------------------------------------------
+def test_auto_inflight_tunes_and_records(t10_db, oracle):
+    """inflight=None: the engine self-sizes the queue depth from the first
+    steady-state chunk, results stay exact, and the chosen depth lands in
+    the JobProfile rows."""
+    runner = JaxRunner(store="packed_bitmap", cand_block=32, inflight=None)
+    assert runner.engine.inflight_auto and runner.engine.inflight == 1
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                               runner=runner).mine(t10_db)
+    assert res.itemsets == oracle
+    assert runner.engine._inflight_tuned
+    assert 1 <= runner.engine.inflight <= 8
+    assert any(p.inflight_depth == runner.engine.inflight
+               for p in res.levels if p.k > 1)
+
+
+def test_auto_inflight_single_chunk_waves_stay_default(t10_db, oracle):
+    """Waves that fit one cand_block never produce a clean sample; auto mode
+    must behave exactly like the default depth (not degrade to sync)."""
+    runner = JaxRunner(store="packed_bitmap", inflight=None)  # cand_block 32k
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                               runner=runner).mine(t10_db)
+    assert res.itemsets == oracle
+    assert not runner.engine._inflight_tuned
+    assert runner.engine.inflight == 1  # classic double buffering throughout
+
+
+def test_miner_inflight_none_means_auto():
+    """inflight=None through the miner reaches the engine as auto-sizing —
+    the same sentinel must not silently mean a fixed depth of 1."""
+    auto = FrequentItemsetMiner(min_support=0.05, store="packed_bitmap",
+                                inflight=None)._make_runner()
+    assert auto.engine.inflight_auto
+    fixed = FrequentItemsetMiner(min_support=0.05,
+                                 store="packed_bitmap")._make_runner()
+    assert not fixed.engine.inflight_auto and fixed.engine.inflight == 1
+
+
+# -- candidate-axis sharding ------------------------------------------------
+def _mesh_2d(n_data, n_cand):
+    return compat_make_mesh((n_data, n_cand), ("data", "cand"))
+
+
+def test_pad_candidates_shard_divisible():
+    cand = np.arange(130 * 2, dtype=np.int32).reshape(130, 2)
+    for shards in [1, 2, 3, 8]:
+        out = pad_candidates(cand, f_pad=512, shards=shards)
+        assert out.shape[0] % shards == 0
+        np.testing.assert_array_equal(out[:130], cand)
+        assert (out[130:] == 511).all()  # unmatchable pad rows
+
+
+def test_cand_axes_requires_mesh():
+    with pytest.raises(ValueError, match="cand_axes"):
+        MapReduceEngine(store="perfect_hash", cand_axes=("cand",))
+
+
+def test_engine_rejects_axes_missing_from_mesh():
+    """Misconfiguration (cand_axes on a data-only mesh) fails at
+    construction, not as a KeyError inside the first count."""
+    mesh = compat_make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="missing"):
+        MapReduceEngine(store="perfect_hash", mesh=mesh, cand_axes=("cand",))
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_cand_sharding_trivial_mesh_bit_identical(t10_db, store):
+    """The cand-sharded code path (specs, padding, out_specs stitching) on a
+    1x1 mesh reproduces the single-device counts bit-for-bit."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    ref = MapReduceEngine(store=store)
+    ref.place(encode_db(dbd, n_items=n_items))
+    eng = MapReduceEngine(store=store, mesh=_mesh_2d(1, 1),
+                          data_axes=("data",), cand_axes=("cand",))
+    eng.place(encode_db(dbd, n_items=n_items))
+    np.testing.assert_array_equal(eng.count_candidates(mat),
+                                  ref.count_candidates(mat))
+
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_cand_sharding_2x4_bit_identical(t10_db, store):
+    """Acceptance: candidate-axis sharded counts on a 2x4 data x cand mesh
+    are bit-identical to the replicated path, for every store layout
+    (row-major, word-major transposed, k-hot)."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    enc = encode_db(dbd, n_items=n_items)
+    rep = MapReduceEngine(store=store, mesh=_mesh_2d(8, 1),
+                          data_axes=("data",))
+    rep.place(enc)
+    shd = MapReduceEngine(store=store, mesh=_mesh_2d(2, 4),
+                          data_axes=("data",), cand_axes=("cand",),
+                          cand_block=64, inflight=2)
+    shd.place(enc)
+    single = MapReduceEngine(store=store)
+    single.place(enc)
+    expect = single.count_candidates(mat)
+    np.testing.assert_array_equal(rep.count_candidates(mat), expect)
+    np.testing.assert_array_equal(shd.count_candidates(mat), expect)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("store", ["packed_bitmap", "perfect_hash"])
+def test_cand_sharding_2x4_miner_parity(t10_db, oracle, store):
+    runner = ShardedRunner(store=store, mesh=_mesh_2d(2, 4),
+                           cand_axes=("cand",))
+    assert "c4" in runner.describe()
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                               runner=runner).mine(t10_db)
+    assert res.itemsets == oracle
 
 
 # -- degenerate databases --------------------------------------------------
