@@ -1,4 +1,5 @@
-"""Unified runtime: sync vs async double-buffered wave dispatch, Job1
+"""Unified runtime: sync vs async double-buffered wave dispatch, the
+encode/count pipeline overlap (phase walls vs overlapped wall), Job1
 host-loop vs device histogram, and the cross-backend JobProfile comparison
 table (sim / jax / sharded x structure / store x k) — with
 bit-identical-results checks inline."""
@@ -88,6 +89,77 @@ def run() -> list:
         if inflight > 0:
             meta += f";speedup_vs_sync={secs[0] / secs[inflight]:.2f}x"
         out.append(row(f"runtime/wave_{label}", secs[inflight] * 1e6, meta))
+
+    # -- encode/count pipelining: phase walls vs overlapped wall ------------
+    # The serialized schedule is the pre-pipelined engine's: per chunk,
+    # block until the encode is device-complete, then block on the count
+    # fetch — encode i+1 never starts before count i finishes, and the
+    # device idles through every host round-trip.  The two per-phase walls
+    # of that schedule are timed chunk-by-chunk; the pipelined path
+    # (encode_ahead=2 over the inflight count queue) dispatches the encode
+    # of chunks i+1..i+2 before blocking on the count of chunk i, so the
+    # overlapped wall must come in under the sum of the phase walls.
+    #
+    # Measurement: on a one-CPU-device box encode and count execute on the
+    # same device, so the pipeline's real win is eliminating per-chunk host
+    # round-trips — tiny chunks of the cheap-count packed store maximize
+    # the round-trip share of the wall (72 chunks), putting the serialized
+    # penalty well above this box's timing jitter.  Rounds alternate which
+    # schedule runs first and medians are compared, cancelling load drift.
+    import time as _time
+
+    import jax as _jax
+
+    OVERLAP_STORE, OVERLAP_BLOCK, ROUNDS = WAVE_STORE, 64, 11
+    eng = MapReduceEngine(store=OVERLAP_STORE, cand_block=OVERLAP_BLOCK,
+                          inflight=2)
+    eng.place(enc)
+    eng.count_candidates(mat)  # warm the encode/count jit caches
+    chunks = [mat[i : i + OVERLAP_BLOCK]
+              for i in range(0, mat.shape[0], OVERLAP_BLOCK)]
+
+    def phases_serialized():
+        enc_s = cnt_s = 0.0
+        counts = []
+        for c in chunks:
+            t0 = _time.perf_counter()
+            e = _jax.block_until_ready(eng._dispatch_encode(c))
+            enc_s += _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            got = np.asarray(_jax.device_get(eng._dispatch_count(e)))
+            cnt_s += _time.perf_counter() - t0
+            counts.append(got[: c.shape[0]])  # trim the pad rows per chunk
+        return enc_s, cnt_s, np.concatenate(counts)
+
+    enc_walls, cnt_walls, ovl_walls = [], [], []
+    serial_counts = None
+    for r in range(ROUNDS):
+        runs = [0, 1] if r % 2 == 0 else [1, 0]
+        for which in runs:
+            if which == 0:
+                e_s, c_s, serial_counts = phases_serialized()
+                enc_walls.append(e_s)
+                cnt_walls.append(c_s)
+            else:
+                overlapped, s = timed(eng.count_candidates, mat)
+                ovl_walls.append(s)
+    np.testing.assert_array_equal(  # pipelining never changes arithmetic
+        overlapped, serial_counts)
+    encode_s = float(np.median(enc_walls))
+    count_s = float(np.median(cnt_walls))
+    overlap_s = float(np.median(ovl_walls))
+    phase_sum = encode_s + count_s
+    out.append(row("runtime/wave_phase_encode", encode_s * 1e6,
+                   f"store={OVERLAP_STORE};chunks={len(chunks)};"
+                   f"serialized_schedule;median_of={ROUNDS}"))
+    out.append(row("runtime/wave_phase_count", count_s * 1e6,
+                   f"store={OVERLAP_STORE};chunks={len(chunks)};"
+                   f"serialized_schedule;median_of={ROUNDS}"))
+    out.append(row(
+        "runtime/wave_overlapped", overlap_s * 1e6,
+        f"store={OVERLAP_STORE};phase_sum_ms={phase_sum * 1e3:.1f};"
+        f"encode_ahead=2;overlap_ok={overlap_s < phase_sum};"
+        f"speedup_vs_phases={phase_sum / overlap_s:.2f}x"))
 
     # -- end-to-end: pipelined SPC miner, sync vs double-buffered -----------
     ref_sets = None

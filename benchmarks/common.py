@@ -43,6 +43,8 @@ def profile_meta(prof) -> str:
         parts.append(f"mappers={len(prof.mapper_seconds)}")
     if prof.inflight_depth:
         parts.append(f"inflight={prof.inflight_depth}")
+    if prof.inflight_retunes:
+        parts.append(f"retunes={prof.inflight_retunes}")
     return ";".join(parts)
 
 

@@ -62,20 +62,24 @@ class FrequentItemsetMiner:
         cand_axes: Optional[Tuple[str, ...]] = None,
         max_k: int = 16,
         block_n: Optional[int] = None,
+        cand_block: Optional[int] = None,
         inflight=_UNSET,
+        encode_ahead: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
         runner: Optional[BaseRunner] = None,
     ) -> None:
         if runner is not None and (
             any(v is not None
-                for v in (store, mesh, data_axes, cand_axes, block_n))
+                for v in (store, mesh, data_axes, cand_axes, block_n,
+                          cand_block, encode_ahead))
             or inflight is not _UNSET
         ):
             # An explicit runner owns its backend config; silently ignoring
             # these would mine with a different setup than requested.
             raise ValueError(
                 "pass backend config either through runner= or through "
-                "store/mesh/data_axes/cand_axes/block_n/inflight — not both"
+                "store/mesh/data_axes/cand_axes/block_n/cand_block/"
+                "inflight/encode_ahead — not both"
             )
         self.min_support = min_support
         self.store = store if store is not None else "perfect_hash"
@@ -85,9 +89,13 @@ class FrequentItemsetMiner:
         self.cand_axes = cand_axes if cand_axes is not None else ()
         self.max_k = max_k
         self.block_n = block_n if block_n is not None else 2048
+        self.cand_block = cand_block if cand_block is not None else 32_768
         # inflight=None passes through to the engine as "auto-size the
         # async queue depth"; unset means the fixed default of 1.
         self.inflight = 1 if inflight is _UNSET else inflight
+        # Encode-stage lookahead (chunks encoded on device ahead of their
+        # count dispatch); None keeps the engine's double-buffered default.
+        self.encode_ahead = encode_ahead if encode_ahead is not None else 2
         self.checkpoint_dir = checkpoint_dir
         self.runner = runner
 
@@ -96,7 +104,9 @@ class FrequentItemsetMiner:
             return self.runner
         return make_runner(store=self.store, mesh=self.mesh,
                            data_axes=self.data_axes, cand_axes=self.cand_axes,
-                           block_n=self.block_n, inflight=self.inflight)
+                           block_n=self.block_n, cand_block=self.cand_block,
+                           inflight=self.inflight,
+                           encode_ahead=self.encode_ahead)
 
     def _config(self, runner: BaseRunner) -> dict:
         """The run configuration stamped into checkpoints; a checkpoint from

@@ -27,15 +27,27 @@ transposed, ...) declare which axis carries ``C`` via
 Per wave, only the small (C, k) int32 candidate matrix crosses the host
 boundary; the store-specific candidate tensors (k-hot rows, packed words,
 bucket hashes) are built on device by the store's jit'd ``encode_candidates``.
+With candidate-axis sharding the encode itself is **shard-local**: the (C, k)
+matrix is placed partitioned over the ``cand`` axes and ``encode_candidates``
+runs inside a ``shard_map`` whose out_specs come from the store's
+``candidate_shard_axes()`` layout map — each device encodes only its own
+``C/n_cand_shards`` candidate rows instead of encoding the full wave and
+resharding, so per-device encode flops and memory shrink with the mesh.
 
-Wave dispatch is **async and double-buffered**: ``count_candidates_async``
-splits a wave into ``cand_block`` chunks and dispatches each without
-blocking (JAX async dispatch), keeping up to ``inflight`` chunk results
-outstanding in a FIFO before forcing the oldest to host.  The host is free
-to run the next level's ``apriori_gen_matrix`` while the device counts —
-``inflight=0`` degenerates to the old blocking per-chunk behaviour, and the
-returned counts are bit-identical at any depth (the queue only reorders
-*waiting*, never arithmetic).
+Wave dispatch is **async and double-buffered at both pipeline stages**:
+``count_candidates_async`` splits a wave into ``cand_block`` chunks and
+dispatches each without blocking (JAX async dispatch).  Encode and count are
+separate dispatches: up to ``encode_ahead`` chunks sit fully encoded in an
+encode-slot FIFO before their count is submitted, and up to ``inflight``
+submitted chunk results stay outstanding in the count FIFO before the oldest
+is forced to host.  While the host blocks fetching the count of chunk i, the
+device already holds the *encode* of chunks i+1..i+encode_ahead (and their
+queued counts), so the encode of the next chunk is never serialized behind
+the count of the current one.  The host is additionally free to run the next
+level's ``apriori_gen_matrix`` while the device counts — ``inflight=0``
+degenerates to the old blocking per-chunk behaviour (no encode lookahead),
+and the returned counts are bit-identical at any depth (both queues only
+reorder *waiting*, never arithmetic).
 
 Job1 (the 1-itemset histogram) is a device job through the same machinery:
 ``count_items_device`` scatter-adds the padded transaction matrix into a
@@ -103,6 +115,7 @@ class MapReduceEngine:
         block_n: int = 2048,
         cand_block: int = 32_768,
         inflight: Optional[int] = 1,
+        encode_ahead: int = 2,
     ) -> None:
         if store not in ARRAY_STORES:
             raise ValueError(f"unknown store {store!r}; pick from {list(ARRAY_STORES)}")
@@ -131,10 +144,21 @@ class MapReduceEngine:
         self.inflight_auto = inflight is None
         self._inflight_tuned = False
         self.inflight = 1 if inflight is None else inflight
+        # How many chunks may sit fully encoded (device-side) ahead of their
+        # count dispatch — the encode-stage double buffer.  0 pins encode to
+        # count (the pre-pipelined schedule); inflight=0 also forces 0 so the
+        # fully synchronous path stays exactly chunk-by-chunk.
+        self.encode_ahead = encode_ahead
+        # Per-chunk work (min(C, cand_block) * k) the depth was last tuned
+        # on, and the cumulative mid-run re-tunes (surfaced via JobProfile).
+        self._tuned_work: Optional[int] = None
+        self._retune_pending = False
+        self.inflight_retunes = 0
         self._trans_device = None
         self._enc: Optional[EncodedDB] = None
         self._count_jit = None
         self._encode_jit = None
+        self._cand_in_sharding = None  # sharding of the (C, k) encode input
         # FIFO of (pending, slot, device_counts, n_valid) across all waves.
         self._queue: Deque[tuple] = collections.deque()
         self._job1_jit = {}  # (N, L, n_items) -> compiled histogram job
@@ -178,10 +202,26 @@ class MapReduceEngine:
         self._enc = enc
         self._count_jit = None  # built lazily (needs the candidate tree structure)
         # Device-side candidate encoder: (C, k) int32 -> the store's candidate
-        # tensors, all built on device (jit caches per (C, k) shape).
-        self._encode_jit = jax.jit(
-            functools.partial(self.store.encode_candidates, f_pad=enc.f_pad)
-        )
+        # tensors, all built on device (jit caches per (C, k) shape).  With
+        # candidate-axis sharding the encode is shard-local: the (C, k) input
+        # arrives partitioned over ``cand`` and encode_candidates runs inside
+        # shard_map, so each device encodes only its own candidate rows; the
+        # store's candidate_shard_axes() layout map supplies the out_specs.
+        encode_fn = functools.partial(self.store.encode_candidates,
+                                      f_pad=enc.f_pad)
+        if self.mesh is not None and self.cand_axes:
+            axes_map = self.store.candidate_shard_axes()
+            out_specs = {name: self._cand_pspec(axis)
+                         for name, axis in axes_map.items()}
+            self._encode_jit = jax.jit(_shard_map(
+                encode_fn, mesh=self.mesh,
+                in_specs=(P(self.cand_axes),), out_specs=out_specs))
+            self._cand_in_sharding = NamedSharding(self.mesh, P(self.cand_axes))
+        else:
+            self._encode_jit = jax.jit(encode_fn)
+            self._cand_in_sharding = (
+                NamedSharding(self.mesh, P()) if self.mesh is not None else None
+            )
 
     def _blocked_count(self, trans: dict, cands: dict) -> jnp.ndarray:
         """Mapper body: lax.map over Nb-blocks bounds peak (Nb, C) memory."""
@@ -232,23 +272,35 @@ class MapReduceEngine:
         return jax.jit(fn)
 
     # -- counting ------------------------------------------------------------
-    def _dispatch_chunk(self, chunk: np.ndarray):
-        """Encode + dispatch one candidate chunk; returns the *unfetched*
-        device counts (JAX async dispatch — nothing here blocks on compute)."""
+    def _dispatch_encode(self, chunk: np.ndarray) -> dict:
+        """Dispatch the device-side encode of one candidate chunk; returns
+        the *unfetched* store candidate tensors (JAX async dispatch — nothing
+        here blocks on compute).  Under candidate-axis sharding the (C, k)
+        matrix is placed partitioned over ``cand`` and each device encodes
+        only its own rows — the encoded tensors come out of the shard_map
+        already carrying the layouts the count step consumes, so no reshard
+        (and no replicated full-wave encode) happens in between."""
         cand_p = pad_candidates(chunk, self._enc.f_pad,
                                 shards=self.n_cand_shards)
         cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
-        if self.mesh is not None:
-            rep = NamedSharding(self.mesh, P())
-            cand_dev = jax.device_put(cand_dev, rep)
-        cands = self._encode_jit(cand_dev)
-        if self.mesh is not None:
-            specs = self._cand_specs(cands)
-            cands = {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
-                     for k, v in cands.items()}
+        if self._cand_in_sharding is not None:
+            cand_dev = jax.device_put(cand_dev, self._cand_in_sharding)
+        return self._encode_jit(cand_dev)
+
+    def _dispatch_count(self, cands: dict):
+        """Dispatch the count of an already-encoded chunk (non-blocking)."""
         if self._count_jit is None:
             self._count_jit = self._build_count_fn(cands)
         return self._count_jit(self._trans_device, cands)
+
+    def _count_encoded(self, pending: "PendingCounts", encoded: Deque) -> None:
+        """Move the oldest encode slot into the count FIFO; drain the count
+        FIFO down to ``inflight`` outstanding results."""
+        slot, cands, n_valid = encoded.popleft()
+        dev = self._dispatch_count(cands)
+        self._queue.append((pending, slot, dev, n_valid))
+        while len(self._queue) > self.inflight:
+            self._force_oldest()
 
     def _force_oldest(self) -> None:
         """Fetch the oldest outstanding chunk result to host (blocking)."""
@@ -272,22 +324,49 @@ class MapReduceEngine:
             pending = PendingCounts(self, 1)
             pending._parts[0] = np.zeros((cand.shape[0],), np.int64)
             return pending
+        # The depth models per-*chunk* latency, so drift is judged on the
+        # work of one dispatched chunk — a wave whose C shrinks but still
+        # fills cand_block-sized chunks has identical chunk latency and must
+        # not pay a pipeline-draining re-tune at every level transition.
+        chunk_work = (min(int(cand.shape[0]), self.cand_block)
+                      * int(cand.shape[1]))
+        if (self.inflight_auto and self._inflight_tuned
+                and self._tuned_work is not None
+                and not (self._tuned_work / 2 <= chunk_work
+                         <= self._tuned_work * 2)):
+            # The wave's per-chunk (C, k) work drifted more than 2x from the
+            # shape the depth was tuned on (chunk latency scales with work,
+            # so the old depth is stale): re-tune on the next clean chunk.
+            self._inflight_tuned = False
+            self._retune_pending = True
         starts = range(0, cand.shape[0], self.cand_block)
         pending = PendingCounts(self, len(starts))
+        # Encode slots: chunks whose device-side encode has been dispatched
+        # but whose count has not — the encode of chunk i+1 (and beyond, up
+        # to ``encode_ahead``) is submitted before the host ever blocks on
+        # the count of chunk i.  inflight=0 keeps the old strictly
+        # chunk-by-chunk schedule (no lookahead).
+        encoded: Deque[tuple] = collections.deque()
+        ahead = self.encode_ahead if self.inflight > 0 else 0
         for slot, i in enumerate(starts):
             chunk = cand[i : i + self.cand_block]
             if (self.inflight_auto and not self._inflight_tuned
                     and slot == 1 and chunk.shape[0] == self.cand_block):
-                self._tune_inflight(pending, slot, chunk)
+                while encoded:  # the sample must not queue behind slot 0
+                    self._count_encoded(pending, encoded)
+                self._tune_inflight(pending, slot, chunk, chunk_work)
+                ahead = self.encode_ahead if self.inflight > 0 else 0
                 continue
-            dev = self._dispatch_chunk(chunk)
-            self._queue.append((pending, slot, dev, chunk.shape[0]))
-            while len(self._queue) > self.inflight:
-                self._force_oldest()
+            encoded.append((slot, self._dispatch_encode(chunk),
+                            chunk.shape[0]))
+            if len(encoded) > ahead:
+                self._count_encoded(pending, encoded)
+        while encoded:  # counts of the trailing encode slots (all async)
+            self._count_encoded(pending, encoded)
         return pending
 
     def _tune_inflight(self, pending: PendingCounts, slot: int,
-                       chunk: np.ndarray) -> None:
+                       chunk: np.ndarray, chunk_work: int) -> None:
         """Auto-size the queue depth (``inflight=None``): depth = how many
         chunks the host can submit while one completes on device, i.e.
         device completion latency / host dispatch time, clamped to [1, 8].
@@ -298,16 +377,18 @@ class MapReduceEngine:
         has a different padded shape and would recompile inside the sample).
         Until a clean sample arrives the engine runs at the classic
         double-buffering depth of 1 — single-chunk waves never tune and
-        simply stay at depth 1, where the queue depth is moot.  Counts are
-        bit-identical at any depth, so tuning never changes results, only
-        waiting.
+        simply stay at depth 1, where the queue depth is moot.  When a later
+        wave's per-chunk (C, k) work drifts more than 2x from ``_tuned_work``
+        the next clean chunk re-runs this sampling (``inflight_retunes``
+        counts those mid-run re-tunes).  Counts are bit-identical at any
+        depth, so tuning never changes results, only waiting.
         """
         # Drain outstanding work first so the sampled chunk is not queued
         # behind a prior dispatch (one-off: only the tuning wave pays this).
         while self._queue:
             self._force_oldest()
         t0 = time.perf_counter()
-        dev = self._dispatch_chunk(chunk)
+        dev = self._dispatch_count(self._dispatch_encode(chunk))
         submit_s = time.perf_counter() - t0
         self._queue.append((pending, slot, dev, chunk.shape[0]))
         t0 = time.perf_counter()
@@ -316,6 +397,10 @@ class MapReduceEngine:
         self.inflight = int(np.clip(
             round(wait_s / max(submit_s, 1e-6)), 1, 8))
         self._inflight_tuned = True
+        self._tuned_work = chunk_work
+        if self._retune_pending:  # a mid-run re-tune actually fired
+            self.inflight_retunes += 1
+            self._retune_pending = False
 
     def count_candidates(self, cand: np.ndarray) -> np.ndarray:
         """Blocking wrapper: (C, k) candidate matrix -> int64[C] counts."""

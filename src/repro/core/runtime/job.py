@@ -30,6 +30,10 @@ the two per job validates the ``max(mappers) + reduce`` cost model.
 ``inflight_depth`` records the async dispatch queue depth the engine-backed
 runners actually ran with — the auto-sized depth when the engine was built
 with ``inflight=None``; 0 on runners without a dispatch queue (simulator).
+``inflight_retunes`` is the engine's cumulative count of mid-run depth
+re-tunes (``inflight=None`` re-samples the depth when a wave's *per-chunk*
+(C, k) work — min(C, cand_block) * k — drifts more than 2x from the shape
+it was tuned on); 0 when auto-sizing is off or no wave ever drifted.
 """
 
 from __future__ import annotations
@@ -53,6 +57,7 @@ class JobProfile:
     reduce_seconds: float = 0.0
     mapper_seconds: List[float] = dataclasses.field(default_factory=list)
     inflight_depth: int = 0     # effective async queue depth (engine runners)
+    inflight_retunes: int = 0   # cumulative mid-run depth re-tunes (auto mode)
 
     @property
     def parallel_seconds(self) -> float:

@@ -341,6 +341,7 @@ class _JaxPending:
             seconds=self._encode_s + wait_s,
             encode_seconds=self._encode_s, count_seconds=wait_s,
             inflight_depth=self._runner.engine.inflight,
+            inflight_retunes=self._runner.engine.inflight_retunes,
         )
         return counts, prof
 
@@ -359,12 +360,16 @@ class JaxRunner(BaseRunner):
     def __init__(self, store: str = "perfect_hash", block_n: int = 2048,
                  cand_block: int = 32_768, inflight: Optional[int] = 1,
                  mesh=None, data_axes: Tuple[str, ...] = ("data",),
-                 cand_axes: Tuple[str, ...] = ()) -> None:
+                 cand_axes: Tuple[str, ...] = (),
+                 encode_ahead: int = 2) -> None:
         # inflight=None => auto-size the queue depth from the first clean
         # chunk's measured device latency vs host dispatch time (engine).
+        # encode_ahead = how many chunks may sit fully encoded on device
+        # ahead of their count dispatch (the encode-stage double buffer).
         self.engine = MapReduceEngine(
             store=store, mesh=mesh, data_axes=data_axes, cand_axes=cand_axes,
             block_n=block_n, cand_block=cand_block, inflight=inflight,
+            encode_ahead=encode_ahead,
         )
         self._padded_raw: Optional[np.ndarray] = None
         self._n_raw = 0
@@ -432,23 +437,27 @@ class ShardedRunner(JaxRunner):
     def __init__(self, store: str = "perfect_hash", mesh=None,
                  data_axes: Tuple[str, ...] = ("data",),
                  cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
-                 cand_block: int = 32_768, inflight: Optional[int] = 1) -> None:
+                 cand_block: int = 32_768, inflight: Optional[int] = 1,
+                 encode_ahead: int = 2) -> None:
         if mesh is None:
             from repro.launch.mesh import make_data_cand_mesh, make_data_mesh
 
             mesh = make_data_cand_mesh() if cand_axes else make_data_mesh()
         super().__init__(store=store, block_n=block_n, cand_block=cand_block,
                          inflight=inflight, mesh=mesh, data_axes=data_axes,
-                         cand_axes=cand_axes)
+                         cand_axes=cand_axes, encode_ahead=encode_ahead)
 
 
 def make_runner(store: str = "perfect_hash", mesh=None,
                 data_axes: Tuple[str, ...] = ("data",),
                 cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
-                inflight: Optional[int] = 1) -> BaseRunner:
+                cand_block: int = 32_768, inflight: Optional[int] = 1,
+                encode_ahead: int = 2) -> BaseRunner:
     """Default runner selection for drivers: mesh => sharded, else single."""
     if mesh is not None or cand_axes:
         return ShardedRunner(store=store, mesh=mesh, data_axes=data_axes,
                              cand_axes=cand_axes, block_n=block_n,
-                             inflight=inflight)
-    return JaxRunner(store=store, block_n=block_n, inflight=inflight)
+                             cand_block=cand_block, inflight=inflight,
+                             encode_ahead=encode_ahead)
+    return JaxRunner(store=store, block_n=block_n, cand_block=cand_block,
+                     inflight=inflight, encode_ahead=encode_ahead)

@@ -143,7 +143,7 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
         # resolve in dispatch order and merge.
         frequent: Dict[Itemset, int] = {}
         encode_s = count_s = reduce_s = build_s = runner_gen_s = 0.0
-        inflight_depth = 0
+        inflight_depth = inflight_retunes = 0
         mappers: List[float] = []
         for wave, pending in zip(waves, pendings):
             counts, prof = pending.result()
@@ -155,6 +155,8 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
             build_s += prof.build_seconds
             runner_gen_s += prof.gen_seconds
             inflight_depth = max(inflight_depth, prof.inflight_depth)
+            # Cumulative engine counter: the latest wave carries the total.
+            inflight_retunes = max(inflight_retunes, prof.inflight_retunes)
             if prof.mapper_seconds:  # combined job: mapper slots add up
                 mappers = [a + b for a, b in zip(mappers, prof.mapper_seconds)] \
                     if mappers else list(prof.mapper_seconds)
@@ -170,6 +172,7 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
             gen_seconds=gen_s, build_seconds=build_s, encode_seconds=encode_s,
             count_seconds=count_s, reduce_seconds=reduce_s,
             mapper_seconds=mappers, inflight_depth=inflight_depth,
+            inflight_retunes=inflight_retunes,
         )
         yield stats, frequent
         top_k = max((len(s) for s in frequent), default=0)

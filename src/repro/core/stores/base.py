@@ -134,8 +134,12 @@ def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128,
     ``shards`` > 1 (candidate-axis sharding) additionally rounds C up to a
     multiple of the shard count so the padded matrix splits evenly over the
     ``cand`` mesh axes; the extra rows are the same unmatchable pads.
+    An empty (0, k) matrix keeps its k so downstream shapes stay consistent.
     """
-    c, k = cand.shape if cand.size else (0, 1)
+    if cand.ndim == 2 and cand.shape[1]:
+        c, k = cand.shape
+    else:
+        c, k = 0, 1
     c_pad = max(align, ((c + align - 1) // align) * align)
     if shards > 1:
         c_pad = ((c_pad + shards - 1) // shards) * shards

@@ -51,7 +51,12 @@ class BitmapMXUStore:
 
     @staticmethod
     def candidate_shard_axes() -> dict:
-        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        """Tensor name -> axis carrying C.  Doubles as the out_specs of the
+        shard-local ``encode_candidates`` shard_map (engine): every tensor
+        ``encode_candidates`` returns must be listed here.  The k-hot
+        scatter then builds only the (C/n_cand_shards, F_pad) rows of the
+        local shard — the f32 k-hot matrix is the biggest candidate tensor
+        of any store, exactly the one worth never materializing in full."""
         return {"khot": 0, "kvec": 0}
 
     @classmethod

@@ -63,10 +63,14 @@ class PackedBitmapStore:
 
     @classmethod
     def candidate_shard_axes(cls) -> dict:
-        """Tensor name -> axis carrying C (for candidate-axis sharding).
+        """Tensor name -> axis carrying C.  Doubles as the out_specs of the
+        shard-local ``encode_candidates`` shard_map (engine): every tensor
+        ``encode_candidates`` returns must be listed here.
 
         The jnp path materializes the word-major transpose, so its C axis is
-        axis 1; the kernel path keeps row-major (C, W)."""
+        axis 1 (the non-leading shard axis exercises the engine's
+        per-tensor PartitionSpec construction); the kernel path keeps
+        row-major (C, W)."""
         body = {"packed": 0} if cls.use_kernel else {"packedT": 1}
         return {**body, "kvec": 0}
 

@@ -28,7 +28,9 @@ class PerfectHashStore:
 
     @staticmethod
     def candidate_shard_axes() -> dict:
-        """Tensor name -> axis carrying C (for candidate-axis sharding)."""
+        """Tensor name -> axis carrying C.  Doubles as the out_specs of the
+        shard-local ``encode_candidates`` shard_map (engine): every tensor
+        ``encode_candidates`` returns must be listed here."""
         return {"cand": 0}
 
     @staticmethod

@@ -40,6 +40,11 @@ def make_data_cand_mesh(n_data=None, n_cand=None):
     With no sizes given, ``cand`` takes the largest power of two not above
     sqrt(device_count) that divides it (8 devices -> 4x2 data x cand), so
     both the transaction and the candidate axis get parallelism.
+
+    Oversubscription fails here with the requested grid spelled out, not as
+    an opaque error inside ``jax.make_mesh`` after the runner is half-built
+    (shard-local encode makes a wrong mesh shape expensive to debug: every
+    per-store layout in ``candidate_shard_axes()`` keys off these axes).
     """
     total = jax.device_count()
     if n_cand is None:
@@ -51,6 +56,12 @@ def make_data_cand_mesh(n_data=None, n_cand=None):
                 n_cand *= 2
     if n_data is None:
         n_data = max(1, total // n_cand)
+    if n_data * n_cand > total:
+        raise ValueError(
+            f"data x cand mesh {n_data}x{n_cand} needs {n_data * n_cand} "
+            f"devices but only {total} exist (force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
     return compat_make_mesh((n_data, n_cand), ("data", "cand"))
 
 

@@ -1,0 +1,23 @@
+"""Every module under ``repro`` imports cleanly.
+
+Cheap rot detector: a stale import, a missing optional-dep gate, or a
+syntax error in a rarely-exercised module (launch/, serve/, configs/)
+surfaces here instead of in the first user's traceback — and the coverage
+gate sees every module's definitions, so "uncovered" always means untested
+code paths, never unimported files.
+"""
+
+import importlib
+import pkgutil
+
+import repro
+
+
+def test_all_repro_modules_import():
+    failures = []
+    for mod in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        try:
+            importlib.import_module(mod.name)
+        except Exception as e:  # collect all, report once
+            failures.append(f"{mod.name}: {type(e).__name__}: {e}")
+    assert not failures, "\n".join(failures)

@@ -65,6 +65,44 @@ def test_parity_sharded_runner(t10_db, oracle, store):
     assert res.itemsets == oracle
 
 
+RUNNER_MATRIX = ["sim-thread", "sim-process", "jax", "sharded-1d",
+                 "sharded-2x4"]
+
+
+@pytest.mark.parametrize("inflight", [0, 1, None])
+@pytest.mark.parametrize("spec", RUNNER_MATRIX)
+def test_runner_cross_product_parity(t10_db, oracle, spec, inflight):
+    """The same seeded DB on every backend x inflight depth yields identical
+    frequent-itemset sets AND supports — pins the shard-local encode +
+    double-buffered encode/count pipeline as bit-identical end to end
+    (cand_block=64 forces multi-chunk waves so the queues actually engage)."""
+    if spec.startswith("sim"):
+        if inflight != 1:
+            pytest.skip("inflight applies to the engine-backed runners only")
+        runner = SimRunner(structure="hash_table_trie", n_mappers=3,
+                           executor=spec.split("-", 1)[1])
+    elif spec == "jax":
+        runner = JaxRunner(store="perfect_hash", cand_block=64,
+                           inflight=inflight)
+    elif spec == "sharded-1d":
+        runner = ShardedRunner(store="packed_bitmap", mesh=_mesh(),
+                               cand_block=64, inflight=inflight)
+    else:  # sharded-2x4: candidate-axis sharding on the full 2-D grid
+        if jax.device_count() < 8:
+            pytest.skip(
+                "needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        runner = ShardedRunner(store="packed_bitmap",
+                               mesh=_mesh_2d(2, 4), cand_axes=("cand",),
+                               cand_block=64, inflight=inflight)
+    try:
+        res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                                   runner=runner).mine(t10_db)
+    finally:
+        if isinstance(runner, SimRunner):
+            runner.close()
+    assert res.itemsets == oracle
+
+
 def test_both_drivers_emit_job_profiles(t10_db):
     sim = run_mapreduce_apriori(t10_db, MIN_SUPPORT, structure="trie", n_mappers=3)
     jax_res = FrequentItemsetMiner(min_support=MIN_SUPPORT).mine(t10_db)
@@ -249,7 +287,9 @@ def test_auto_inflight_tunes_and_records(t10_db, oracle):
     res = FrequentItemsetMiner(min_support=MIN_SUPPORT,
                                runner=runner).mine(t10_db)
     assert res.itemsets == oracle
-    assert runner.engine._inflight_tuned
+    # Tuned at least once (later waves may drift >2x and leave a re-tune
+    # pending that never finds a clean sample chunk — that's fine).
+    assert runner.engine._tuned_work is not None
     assert 1 <= runner.engine.inflight <= 8
     assert any(p.inflight_depth == runner.engine.inflight
                for p in res.levels if p.k > 1)
@@ -275,6 +315,117 @@ def test_miner_inflight_none_means_auto():
     fixed = FrequentItemsetMiner(min_support=0.05,
                                  store="packed_bitmap")._make_runner()
     assert not fixed.engine.inflight_auto and fixed.engine.inflight == 1
+
+
+# -- mid-run depth re-tuning -------------------------------------------------
+def test_inflight_retune_on_wave_shape_drift(t10_db):
+    """inflight=None re-tunes the queue depth when a wave's *per-chunk*
+    (C, k) work drifts more than 2x from the tuned shape, counts the
+    re-tune in ``inflight_retunes``, and stays bit-identical through it.
+    A wave whose C shrinks but still fills cand_block-sized chunks has
+    identical chunk latency and must NOT pay a pipeline-draining re-tune."""
+    import itertools
+
+    dbd, n_items, mat = _c2_wave(t10_db)
+    engine = MapReduceEngine(store="perfect_hash", cand_block=32,
+                             inflight=None)
+    engine.place(encode_db(dbd, n_items=n_items))
+    sync = MapReduceEngine(store="perfect_hash")
+    sync.place(encode_db(dbd, n_items=n_items))
+    engine.count_candidates(mat)  # first clean sample tunes (k=2 chunks)
+    assert engine._inflight_tuned and engine.inflight_retunes == 0
+    engine.count_candidates(mat)  # same shape: no re-tune
+    assert engine.inflight_retunes == 0
+    fewer = mat[:96]  # C shrinks 2x+ but chunks stay full cand_block x k=2
+    np.testing.assert_array_equal(engine.count_candidates(fewer),
+                                  sync.count_candidates(fewer))
+    assert engine.inflight_retunes == 0  # same chunk latency: no stall
+    # k jump 2 -> 5: per-chunk work * 2.5, the depth model is stale.
+    wide = level_to_matrix(list(itertools.islice(
+        itertools.combinations(range(n_items), 5), 80)))
+    np.testing.assert_array_equal(engine.count_candidates(wide),
+                                  sync.count_candidates(wide))
+    assert engine.inflight_retunes == 1
+    small = mat[:16]  # drift back down; single chunk => no clean sample
+    np.testing.assert_array_equal(engine.count_candidates(small),
+                                  sync.count_candidates(small))
+    # No clean second chunk in a single-chunk wave: the re-tune stays
+    # pending, the counter must not advance.
+    assert engine.inflight_retunes == 1
+    assert 1 <= engine.inflight <= 8
+
+
+def test_encode_ahead_determinism(t10_db):
+    """Counts are bit-identical at every (inflight, encode_ahead) pairing —
+    the encode-slot queue only reorders waiting, never arithmetic."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    enc = encode_db(dbd, n_items=n_items)
+    ref = None
+    for inflight in [0, 1, 3]:
+        for ahead in [0, 1, 2, 4]:
+            engine = MapReduceEngine(store="packed_bitmap", cand_block=64,
+                                     inflight=inflight, encode_ahead=ahead)
+            engine.place(enc)
+            got = engine.count_candidates(mat)
+            if ref is None:
+                ref = got
+            np.testing.assert_array_equal(got, ref)
+
+
+# -- fuzzed PR 3 edge cases (explicit seeds) ---------------------------------
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_chunks_fuzz_mappers_exceed_transactions(seed):
+    """More mapper slots than transactions: every slot still represented,
+    order preserved, and exactly m - n of them empty."""
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        n = int(rng.integers(0, 6))
+        m = int(rng.integers(n + 1, 12))
+        chunks = _chunks(list(range(n)), m)
+        assert len(chunks) == m
+        assert [x for c in chunks for x in c] == list(range(n))
+        assert sum(len(c) == 0 for c in chunks) == m - n
+
+
+@pytest.mark.parametrize("c,shards", [(0, 8), (1, 8), (3, 8), (5, 256),
+                                      (127, 130)])
+def test_pad_candidates_fewer_rows_than_shards(c, shards):
+    """C < shards (and shards > the 128 alignment): the padded matrix still
+    splits evenly over the cand axis and pads stay unmatchable."""
+    cand = np.arange(c * 2, dtype=np.int32).reshape(c, 2)
+    out = pad_candidates(cand, f_pad=512, shards=shards)
+    assert out.shape[0] % shards == 0
+    assert out.shape[0] >= c
+    np.testing.assert_array_equal(out[:c], cand)
+    assert (out[c:] == 511).all()
+
+
+@pytest.mark.parametrize("seed", [5, 17])
+def test_place_single_item_db_fuzz(seed):
+    """Seeded single-item DBs through JaxRunner.place(): the dense matrix
+    collapses to the minimum width and counting still works."""
+    rng = np.random.default_rng(seed)
+    item = int(rng.integers(0, 50))
+    db = [[item] for _ in range(int(rng.integers(1, 20)))]
+    runner = JaxRunner(store="perfect_hash")
+    runner.ingest(db)
+    runner.place(np.array([item], np.int64))
+    counts, _ = runner.count(CountJob(k=1, cand=np.array([[0]], np.int32)))
+    np.testing.assert_array_equal(counts, [len(db)])
+
+
+@pytest.mark.parametrize("seed", [29, 31])
+def test_place_all_infrequent_empty_item_map(seed):
+    """All items infrequent: place() with an empty item_map must leave a
+    countable (zero-item) DB instead of tripping on the width clamp."""
+    rng = np.random.default_rng(seed)
+    db = [[int(i)] for i in rng.permutation(30)]
+    runner = JaxRunner(store="perfect_hash")
+    runner.ingest(db)
+    runner.place(np.array([], np.int64))
+    counts, _ = runner.count(
+        CountJob(k=1, cand=np.zeros((0, 1), np.int32)))
+    assert counts.shape == (0,)
 
 
 # -- candidate-axis sharding ------------------------------------------------
@@ -344,6 +495,32 @@ def test_cand_sharding_2x4_bit_identical(t10_db, store):
     expect = single.count_candidates(mat)
     np.testing.assert_array_equal(rep.count_candidates(mat), expect)
     np.testing.assert_array_equal(shd.count_candidates(mat), expect)
+
+
+@needs_8_devices
+def test_shard_local_encode_partitions_candidates(t10_db):
+    """The encoded candidate tensors of a cand-sharded engine come out of
+    the encode shard_map *partitioned* over cand (each device encoded only
+    its own C/4 rows) — not replicated then resharded."""
+    dbd, n_items, mat = _c2_wave(t10_db)
+    eng = MapReduceEngine(store="bitmap", mesh=_mesh_2d(2, 4),
+                          data_axes=("data",), cand_axes=("cand",))
+    eng.place(encode_db(dbd, n_items=n_items))
+    cands = eng._dispatch_encode(mat[:64])
+    khot = cands["khot"]
+    assert not khot.sharding.is_fully_replicated
+    assert {s.data.shape[0] for s in khot.addressable_shards} \
+        == {khot.shape[0] // 4}
+    kvec = cands["kvec"]
+    assert {s.data.shape[0] for s in kvec.addressable_shards} \
+        == {kvec.shape[0] // 4}
+
+
+def test_make_data_cand_mesh_rejects_oversubscription():
+    from repro.launch.mesh import make_data_cand_mesh
+
+    with pytest.raises(ValueError, match="devices"):
+        make_data_cand_mesh(jax.device_count() * 2, 2)
 
 
 @needs_8_devices

@@ -1,0 +1,161 @@
+"""Store-parity property suite (PR 4 satellite).
+
+Every array-layout store's device path — ``encode_candidates`` (shard-local
+under candidate-axis sharding) + ``count_block`` through the engine — must
+reproduce the support counts of the paper's three sequential reference
+structures (hash tree, trie, hash-table trie) *exactly*, for k = 1..4, on
+adversarial databases: varying n_items and density, duplicate transactions,
+duplicate items inside a transaction, empty transactions, empty databases.
+
+The suite is layered so the same parity helper runs everywhere:
+
+- fixed-seed random DBs + hand-picked edge DBs run on any box (no optional
+  deps) — the regression floor;
+- the hypothesis wrapper feeds generated DBs through the identical helper
+  when hypothesis is installed (CI always has it; the local toolchain may
+  not, hence no module-level importorskip);
+- the cand-sharded variant builds a ``(1, device_count)`` data x cand mesh,
+  so the very same test that runs trivially at one device exercises real
+  8-way shard-local encodes in the CI ``mesh-2d`` job.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itemsets import level_to_matrix
+from repro.core.runtime.engine import MapReduceEngine
+from repro.core.sequential import SEQUENTIAL_STORES
+from repro.core.stores import ARRAY_STORES, encode_db
+from repro.launch.mesh import compat_make_mesh
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: the fixed-seed layer still runs
+    HAVE_HYPOTHESIS = False
+
+MAX_K = 4
+MAX_CANDS = 40  # candidate pool cap per level (keeps jit shapes small)
+
+
+def _candidates(db, k):
+    """Deterministic candidate pool: the first MAX_CANDS k-combinations of
+    the observed items, lexicographic (the canonical level-matrix order)."""
+    items = sorted({int(i) for t in db for i in t})
+    return list(itertools.islice(itertools.combinations(items, k), MAX_CANDS))
+
+
+def _sequential_counts(db, cands, structure):
+    store = SEQUENTIAL_STORES[structure](cands)
+    for t in db:
+        store.count_transaction(t)
+    got = store.counts()
+    return np.array([got.get(c, 0) for c in cands], np.int64)
+
+
+def _assert_store_parity(db, n_items, store, mesh=None, cand_axes=()):
+    """One DB through one array store (k=1..4) vs all three references."""
+    engine = MapReduceEngine(store=store, mesh=mesh, cand_axes=cand_axes,
+                             block_n=16, cand_block=64)
+    engine.place(encode_db(db, n_items=n_items))
+    for k in range(1, MAX_K + 1):
+        cands = _candidates(db, k)
+        if not cands:
+            continue
+        got = engine.count_candidates(level_to_matrix(cands))
+        for structure in SEQUENTIAL_STORES:
+            want = _sequential_counts(db, cands, structure)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{store} vs {structure} at k={k}")
+
+
+# -- fixed-seed layer (runs without hypothesis) ------------------------------
+def _random_db(seed):
+    rng = np.random.default_rng(seed)
+    n_items = int(rng.integers(2, 20))
+    density = float(rng.uniform(0.1, 0.6))
+    db = [list(map(int, np.nonzero(rng.random(n_items) < density)[0]))
+          for _ in range(int(rng.integers(1, 30)))]
+    db.append(list(db[0]))  # duplicate transaction: supports must add up
+    db.append([])           # empty transaction: matches nothing
+    if db[0]:
+        db.append([db[0][0]] * 3)  # duplicate items inside one transaction
+    return n_items, db
+
+
+EDGE_DBS = [
+    (1, []),                             # empty database
+    (1, [[]]),                           # single empty transaction
+    (1, [[0], [0], [0]]),                # one item in the whole universe
+    (3, [[0, 1, 2]] * 5),                # identical dense transactions
+    (5, [[4], [0, 4], [], [4, 4, 0]]),   # dup items + empty + sparse ids
+]
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_store_parity_fixed_seeds(store, seed):
+    n_items, db = _random_db(seed)
+    _assert_store_parity(db, n_items, store)
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("case", range(len(EDGE_DBS)))
+def test_store_parity_edge_dbs(store, case):
+    n_items, db = EDGE_DBS[case]
+    _assert_store_parity(db, n_items, store)
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_store_parity_cand_sharded(store):
+    """The shard-local encode path (encode_candidates inside shard_map) on a
+    (1, device_count) data x cand mesh: trivial at one device, 8-way
+    partitioned in the CI mesh-2d job — same counts either way."""
+    n_items, db = _random_db(7)
+    mesh = compat_make_mesh((1, jax.device_count()), ("data", "cand"))
+    _assert_store_parity(db, n_items, store, mesh=mesh, cand_axes=("cand",))
+
+
+# -- the shard-axes layout contract ------------------------------------------
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_candidate_shard_axes_cover_encode_outputs(store):
+    """candidate_shard_axes() doubles as the shard-local encode's out_specs:
+    it must name every tensor encode_candidates returns, each with a valid
+    axis that really carries C (rows in == rows out along that axis)."""
+    cls = ARRAY_STORES[store]
+    cand = jnp.asarray(np.array([[0, 1], [1, 2], [2, 3]], np.int32))
+    out = cls.encode_candidates(cand, f_pad=128)
+    axes = cls.candidate_shard_axes()
+    assert set(out) == set(axes)
+    for name, axis in axes.items():
+        assert 0 <= axis < out[name].ndim
+        assert out[name].shape[axis] == cand.shape[0]
+
+
+# -- hypothesis layer --------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _databases(draw):
+        n_items = draw(st.integers(1, 16))
+        base = draw(st.lists(
+            st.lists(st.integers(0, n_items - 1), min_size=0, max_size=12),
+            min_size=0, max_size=24))
+        if base:  # duplicate whole transactions (support counts accumulate)
+            dup_idx = draw(st.lists(st.integers(0, len(base) - 1),
+                                    max_size=8))
+            base = base + [list(base[i]) for i in dup_idx]
+        return n_items, base
+
+    @pytest.mark.parametrize("store", list(ARRAY_STORES))
+    @given(db=_databases())
+    @settings(max_examples=10, deadline=None)
+    def test_property_store_parity(store, db):
+        n_items, transactions = db
+        _assert_store_parity(transactions, n_items, store)
