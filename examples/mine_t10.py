@@ -1,11 +1,15 @@
-"""End-to-end driver (the paper's kind): mine the full T10I4D100K-scale
-synthetic dataset with checkpoint/restart fault tolerance.
+"""End-to-end driver (the paper's kind): mine a registry dataset with
+checkpoint/restart fault tolerance.
 
   PYTHONPATH=src python examples/mine_t10.py [--scale 1.0] [--min-support 0.02]
+  PYTHONPATH=src python examples/mine_t10.py --dataset T40I10D100K
+  PYTHONPATH=src python examples/mine_t10.py --dataset long_tail
 
 With --scale 1.0 this is the paper's full workload: 100k transactions, the
-complete level-wise run. The miner checkpoints after every level job; kill it
-mid-run and re-run to watch it resume at the last completed level.
+complete level-wise run. Any ``repro.data`` registry name (or ad-hoc Quest
+``T<..>I<..>D<..>`` code) is accepted. The miner checkpoints after every
+level job; kill it mid-run and re-run to watch it resume at the last
+completed level.
 """
 
 import argparse
@@ -13,11 +17,13 @@ import time
 
 from repro.core import FrequentItemsetMiner
 from repro.core.stores import ARRAY_STORES
-from repro.data import quest_generator
+from repro.data import get_dataset
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="T10I4D100K",
+                    help="registry dataset name or Quest code")
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--store", default="bitmap", choices=list(ARRAY_STORES))
@@ -26,10 +32,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_mine_t10")
     args = ap.parse_args()
 
-    n = int(100_000 * args.scale)
-    print(f"generating T10I4D100K twin: {n} transactions ...")
-    db = quest_generator(n_transactions=n, avg_transaction_len=10,
-                         avg_pattern_len=4, n_items=1000, seed=42)
+    print(f"generating {args.dataset} @ scale {args.scale} ...")
+    db = get_dataset(args.dataset, scale=args.scale, seed=42)
+    print(f"{len(db)} transactions")
 
     miner = FrequentItemsetMiner(
         min_support=args.min_support, store=args.store,

@@ -13,6 +13,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== docs: markdown link check =="
+python scripts/check_links.py README.md docs/ARCHITECTURE.md EXPERIMENTS.md \
+    ROADMAP.md
+
 echo "== smoke: runner parity (sim vs jax vs sharded) =="
 # Independent of the pytest fixtures above (different seed/params), and far
 # cheaper than re-running the full parity matrix the suite just covered.

@@ -25,6 +25,12 @@ chunks, in-chunk combiner, global reducer.  This package owns that shape:
     The level-wise wave schedulers (SPC/FPC/DPC), threaded through the
     runners' pipelined ``count_async`` API.
 
+``sweep.py``
+    Grid plumbing for the paper's structure x support x mappers sweeps:
+    per-cell ``JobProfile`` aggregation (``aggregate_profiles``), the
+    canonical itemset/support digest, and ``run_parity_cell`` — mine one
+    cell on every backend and hard-assert result identity.
+
 Drivers (``core.miner.FrequentItemsetMiner``, ``core.hadoop_sim``) no longer
 own job loops; they ingest data, pick a runner, and iterate a strategy.
 """
@@ -38,6 +44,12 @@ from repro.core.runtime.runners import (
     SimRunner,
     make_runner,
 )
+from repro.core.runtime.sweep import (
+    CellResult,
+    aggregate_profiles,
+    itemset_digest,
+    run_parity_cell,
+)
 
 __all__ = [
     "CountJob",
@@ -49,4 +61,8 @@ __all__ = [
     "JaxRunner",
     "ShardedRunner",
     "make_runner",
+    "CellResult",
+    "aggregate_profiles",
+    "itemset_digest",
+    "run_parity_cell",
 ]

@@ -94,15 +94,20 @@ def bms_webview_twin(
 
 
 def paper_datasets(scale: float = 1.0, seed: int = 0) -> dict:
-    """The paper's three datasets (twins), optionally scaled down for CI runs."""
+    """The paper's three datasets (twins), optionally scaled down for CI runs.
 
-    def n(x: int) -> int:
-        return max(64, int(x * scale))
+    Thin wrapper over the dataset registry (``repro.data.datasets``) so both
+    APIs build byte-identical databases from one code path.  The per-dataset
+    seed offsets (+0/+1/+2) decorrelate the three workloads within one call
+    and predate the registry — i.e. ``paper_datasets(seed=s)["T10I4D100K"]``
+    equals ``get_dataset("T10I4D100K", scale, seed=s + 2)``, not ``seed=s``.
+    """
+    from repro.data.datasets import get_dataset  # deferred: avoids the cycle
 
     return {
-        "BMS_WebView_1": bms_webview_twin(n(59_602), 497, avg_len=2.5, seed=seed),
-        "BMS_WebView_2": bms_webview_twin(n(77_512), 3340, avg_len=4.6, seed=seed + 1),
-        "T10I4D100K": quest_generator(n(100_000), 10, 4, 1000, seed=seed + 2),
+        "BMS_WebView_1": get_dataset("BMS_WebView_1", scale=scale, seed=seed),
+        "BMS_WebView_2": get_dataset("BMS_WebView_2", scale=scale, seed=seed + 1),
+        "T10I4D100K": get_dataset("T10I4D100K", scale=scale, seed=seed + 2),
     }
 
 
