@@ -198,4 +198,58 @@ def run() -> list:
         for prof in res.levels:
             out.append(row(f"runtime/profile/{label}/k{prof.k}",
                            prof.parallel_seconds * 1e6, profile_meta(prof)))
+
+    # -- robustness tax: the fault-tolerance layer on a clean run -----------
+    # The retry scheduler adds digest validation and bookkeeping to every
+    # mapper wave even when nothing fails.  Pin that overhead below 5% by
+    # mining the same DB with the layer on (DEFAULT_RETRY) and off
+    # (retry=None, the pre-fault-tolerance fast path), interleaved so load
+    # drift cancels.
+    from repro.core import FrequentItemsetMiner
+    from repro.core.runtime import FaultPlan, RetryPolicy
+    from repro.core.runtime import faults as F
+
+    def _mine_sim(retry, fault_plan=None):
+        with SimRunner(structure="trie", n_mappers=4, executor="thread",
+                       retry=retry, fault_plan=fault_plan) as r:
+            return FrequentItemsetMiner(min_support=TABLE_SUPPORT, runner=r,
+                                        max_k=TABLE_MAX_K).mine(db)
+
+    # Interleaved rounds, alternating order, compared by median: single-run
+    # walls on a shared box swing ~15%, so min-of-N is an unstable
+    # estimator for a few-percent overhead.
+    on_ts, off_ts = [], []
+    ref = None
+    for r in range(7):
+        for which in ([0, 1] if r % 2 == 0 else [1, 0]):
+            if which == 0:
+                res_off, sec = timed(_mine_sim, None)
+                off_ts.append(sec)
+            else:
+                res_on, sec = timed(_mine_sim, RetryPolicy())
+                on_ts.append(sec)
+        ref = ref if ref is not None else res_off.itemsets
+        assert res_on.itemsets == res_off.itemsets == ref
+    off_s, on_s = float(np.median(off_ts)), float(np.median(on_ts))
+    overhead = on_s / off_s - 1.0
+    out.append(row("runtime/fault_layer_off", off_s * 1e6,
+                   f"retry=None;frequent={len(ref)}"))
+    out.append(row("runtime/fault_layer_on", on_s * 1e6,
+                   f"retry=default;overhead_pct={overhead * 100:.1f};"
+                   f"overhead_ok={overhead < 0.05}"))
+
+    # -- a faulted run, for the record: chaos + recovery telemetry ----------
+    # All three at k=2: the down-scaled bench DBs may not reach k=3.
+    plan = FaultPlan(F.crash(k=2, slot=0), F.corrupt(k=2, slot=1),
+                     F.hang(delay=0.5, k=2, slot=2))
+    res_faulted, sec = timed(
+        _mine_sim, RetryPolicy(backoff=0.001, timeout=0.1), plan)
+    assert res_faulted.itemsets == ref, "recovery changed results"
+    out.append(row(
+        "runtime/fault_layer_chaos", sec * 1e6,
+        f"injected={len(plan.injected)};"
+        f"retries={sum(p.retries for p in res_faulted.levels)};"
+        f"spec={sum(p.speculative_launches for p in res_faulted.levels)}"
+        f"/{sum(p.speculative_wins for p in res_faulted.levels)};"
+        f"identical_to_clean=True"))
     return out

@@ -45,6 +45,15 @@ def profile_meta(prof) -> str:
         parts.append(f"inflight={prof.inflight_depth}")
     if prof.inflight_retunes:
         parts.append(f"retunes={prof.inflight_retunes}")
+    # Task-recovery telemetry: only present when the job actually recovered
+    # from something (clean runs keep the row format unchanged).
+    if prof.retries:
+        parts.append(f"retries={prof.retries}")
+    if prof.speculative_launches:
+        parts.append(f"spec={prof.speculative_launches}"
+                     f"/{prof.speculative_wins}")
+    if prof.backoff_seconds:
+        parts.append(f"backoff_ms={prof.backoff_seconds * 1e3:.1f}")
     return ";".join(parts)
 
 

@@ -7,6 +7,17 @@ a pass-combining strategy — which owns the per-level jobs — checkpointing
 after every counting job so a preempted mining run resumes at the last
 completed level (the Hadoop analogue: completed jobs are never re-run).
 
+Per-level checkpoints ride the hardened snapshot store
+(``distributed.checkpoint``): one atomic, digest-stamped snapshot per
+completed level, so torn writes are ignored, bit rot is detected and
+quarantined, and a corrupt newest level falls back to the previous one
+(one re-counted level, identical results).  On ``DeviceLostError`` —
+simulated device loss injected through a ``FaultPlan`` — the driver
+rebuilds the largest valid mesh on the surviving devices
+(``distributed.elastic``), restores the level checkpoint, and resumes;
+itemsets AND supports stay bit-identical to a fault-free run because
+counts are mesh-shape-independent.
+
 Any runner works: ``JaxRunner``/``ShardedRunner`` (array-layout stores, the
 TPU-native track) or ``SimRunner`` (the paper's Hadoop cost model over the
 Java-equivalent stores). All of them report per-job ``JobProfile`` rows
@@ -26,6 +37,7 @@ import numpy as np
 from repro.core.itemsets import Itemset, level_to_matrix, sort_level
 from repro.core.runtime import BaseRunner, JobProfile, make_runner
 from repro.core.runtime import strategies
+from repro.core.runtime.faults import DeviceLostError
 
 # Back-compat alias: the old per-level stats type is the unified JobProfile.
 LevelStats = JobProfile
@@ -67,6 +79,7 @@ class FrequentItemsetMiner:
         encode_ahead: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
         runner: Optional[BaseRunner] = None,
+        elastic_restarts: int = 2,
     ) -> None:
         if runner is not None and (
             any(v is not None
@@ -98,6 +111,9 @@ class FrequentItemsetMiner:
         self.encode_ahead = encode_ahead if encode_ahead is not None else 2
         self.checkpoint_dir = checkpoint_dir
         self.runner = runner
+        # How many simulated device losses a single mine() survives before
+        # giving up (each one rebuilds a smaller mesh and resumes).
+        self.elastic_restarts = elastic_restarts
 
     def _make_runner(self) -> BaseRunner:
         if self.runner is not None:
@@ -110,15 +126,63 @@ class FrequentItemsetMiner:
 
     def _config(self, runner: BaseRunner) -> dict:
         """The run configuration stamped into checkpoints; a checkpoint from
-        a different config must never silently resume this run."""
-        return {"runner": runner.describe(), "strategy": self.strategy,
-                "max_k": self.max_k}
+        a different config must never silently resume this run.  The stamp
+        uses ``config_signature()`` (not ``describe()``) so an *elastic*
+        restart — same backend kind and store, shrunk mesh — still resumes."""
+        return {"runner": runner.config_signature(),
+                "strategy": self.strategy, "max_k": self.max_k}
 
     # ------------------------------------------------------------------
     def mine(self, transactions: Sequence[Sequence[int]]) -> MiningResult:
+        """Mine frequent itemsets; survives simulated device loss.
+
+        On ``DeviceLostError`` (injected via a runner ``fault_plan``) the
+        driver closes the dead runner, rebuilds the largest valid mesh on
+        the surviving devices, and re-enters the mining loop — which
+        restores from the per-level checkpoint when ``checkpoint_dir`` is
+        set, or deterministically recomputes from scratch otherwise.
+        Either way the result is bit-identical to a fault-free run.
+        """
         n = len(transactions)
         min_count = max(1, int(np.ceil(self.min_support * n)))
         runner = self._make_runner()
+        restarts = 0
+        while True:
+            self.active_runner = runner  # introspection: tests/benchmarks
+            try:
+                return self._mine_once(runner, transactions, n, min_count)
+            except DeviceLostError as err:
+                restarts += 1
+                runner.close(wait=False)
+                if restarts > self.elastic_restarts:
+                    raise
+                runner = self._elastic_rebuild(runner, err)
+
+    def _elastic_rebuild(self, runner: BaseRunner,
+                         err: DeviceLostError) -> BaseRunner:
+        """A replacement runner on the largest mesh the survivors support."""
+        from repro.core.runtime import ShardedRunner
+        from repro.distributed import elastic
+
+        engine = getattr(runner, "engine", None)
+        if engine is None or engine.mesh is None:
+            raise err  # nothing to shrink: single-device or simulated runner
+        survivors = elastic.surviving_devices(engine.mesh, err.lost)
+        if not survivors:
+            raise err
+        mesh = elastic.elastic_data_cand_mesh(
+            survivors, want_cand=bool(engine.cand_axes))
+        return ShardedRunner(
+            store=engine.store_name, mesh=mesh, data_axes=("data",),
+            cand_axes=("cand",) if engine.cand_axes else (),
+            block_n=engine.block_n, cand_block=engine.cand_block,
+            inflight=None if engine.inflight_auto else engine.inflight,
+            encode_ahead=engine.encode_ahead,
+            fault_plan=getattr(runner, "fault_plan", None),
+        )
+
+    def _mine_once(self, runner: BaseRunner, transactions, n: int,
+                   min_count: int) -> MiningResult:
         runner.ingest(transactions)
 
         state = self._try_restore(n, min_count, self._config(runner))
@@ -160,7 +224,8 @@ class FrequentItemsetMiner:
             top_k = max((len(s) for s in freq_dense), default=0)
             level = sort_level(s for s in freq_dense if len(s) == top_k)
             self._checkpoint(itemsets, levels, level, stats.k + 1, item_map,
-                             n, min_count, self._config(runner))
+                             n, min_count, self._config(runner),
+                             fault_plan=getattr(runner, "fault_plan", None))
 
         return MiningResult(
             itemsets=itemsets, min_count=min_count, n_transactions=n,
@@ -168,52 +233,57 @@ class FrequentItemsetMiner:
         )
 
     # -- fault tolerance ------------------------------------------------
-    def _ckpt_path(self) -> Optional[str]:
-        if self.checkpoint_dir is None:
-            return None
-        return os.path.join(self.checkpoint_dir, "miner_state.npz")
+    # Per-level state rides the hardened snapshot store
+    # (``distributed.checkpoint``): one digest-stamped snapshot per
+    # completed level keyed by ``step=next_k``, the item_map as the tensor
+    # tree and everything else JSON-packed in the manifest's ``extra``.
+    # Torn writes never commit, bit rot quarantines, and a corrupt newest
+    # level falls back to the previous valid one.
 
     def _checkpoint(self, itemsets, levels, level, next_k, item_map, n,
-                    min_count, config):
-        path = self._ckpt_path()
-        if path is None:
+                    min_count, config, fault_plan=None):
+        if self.checkpoint_dir is None:
             return
-        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        from repro.distributed import checkpoint as ckpt
+
         # ``level`` arrives in dense ids; persist original ids so a restart
         # (which recomputes the dense remap) stays consistent.
         orig_level = [[int(item_map[i]) for i in s] for s in level]
-        payload = {
-            "itemsets": json.dumps(
-                [[list(s), c] for s, c in itemsets.items()]
-            ),
-            "levels": json.dumps([dataclasses.asdict(s) for s in levels]),
-            "level": json.dumps(orig_level),
+        extra = {
+            "itemsets": [[list(s), c] for s, c in itemsets.items()],
+            "levels": [dataclasses.asdict(s) for s in levels],
+            "level": orig_level,
             "next_k": next_k,
             "n": n,
             "min_count": min_count,
             "config": json.dumps(config, sort_keys=True),
         }
-        tmp = path + ".tmp.npz"
-        np.savez(tmp, item_map=item_map, **payload)
-        os.replace(tmp, path)  # atomic snapshot
+        ckpt.save(self.checkpoint_dir, step=next_k,
+                  tree={"item_map": np.asarray(item_map)}, extra=extra,
+                  fault_plan=fault_plan)
 
     def _try_restore(self, n: int, min_count: int, config: dict):
-        path = self._ckpt_path()
-        if path is None or not os.path.exists(path):
+        if self.checkpoint_dir is None or \
+                not os.path.isdir(self.checkpoint_dir):
             return None
-        z = np.load(path, allow_pickle=False)
-        if int(z["n"]) != n or int(z["min_count"]) != min_count:
+        from repro.distributed import checkpoint as ckpt
+
+        out = ckpt.load(self.checkpoint_dir)
+        if out is None:
+            return None
+        tensors, _step, extra = out
+        if int(extra.get("n", -1)) != n or \
+                int(extra.get("min_count", -1)) != min_count:
             return None  # stale checkpoint from a different run
-        if "config" not in z.files or \
-                str(z["config"]) != json.dumps(config, sort_keys=True):
+        if extra.get("config") != json.dumps(config, sort_keys=True):
             # Written under a different runner/store/strategy/max_k (or by a
             # pre-runtime version): resuming would silently mix configs.
             return None
-        itemsets = {tuple(s): int(c) for s, c in json.loads(str(z["itemsets"]))}
-        levels = [JobProfile(**d) for d in json.loads(str(z["levels"]))]
-        level = [tuple(s) for s in json.loads(str(z["level"]))]
-        next_k = int(z["next_k"])
-        item_map = z["item_map"]
+        itemsets = {tuple(s): int(c) for s, c in extra["itemsets"]}
+        levels = [JobProfile(**d) for d in extra["levels"]]
+        level = [tuple(s) for s in extra["level"]]
+        next_k = int(extra["next_k"])
+        item_map = np.asarray(tensors["item_map"])
         # Stored levels are in original ids; the loop needs dense ids.
         remap = {int(orig): dense for dense, orig in enumerate(item_map)}
         dense_level = [tuple(remap[i] for i in s) for s in level]

@@ -25,6 +25,12 @@ chunks, in-chunk combiner, global reducer.  This package owns that shape:
     The level-wise wave schedulers (SPC/FPC/DPC), threaded through the
     runners' pipelined ``count_async`` API.
 
+``faults.py``
+    Deterministic seeded fault injection (``FaultPlan``/``FaultSpec``) plus
+    the Hadoop-style ``RetryPolicy`` (bounded retry with exponential
+    backoff, speculative re-execution of stragglers) that ``SimRunner``
+    schedules mapper waves under.
+
 ``sweep.py``
     Grid plumbing for the paper's structure x support x mappers sweeps:
     per-cell ``JobProfile`` aggregation (``aggregate_profiles``), the
@@ -37,6 +43,15 @@ own job loops; they ingest data, pick a runner, and iterate a strategy.
 
 from repro.core.runtime.job import CountJob, JobProfile
 from repro.core.runtime.engine import MapReduceEngine, PendingCounts
+from repro.core.runtime.faults import (
+    DeviceLostError,
+    FaultPlan,
+    FaultSpec,
+    JobFailedError,
+    MapperCrashError,
+    PartialCorruptionError,
+    RetryPolicy,
+)
 from repro.core.runtime.runners import (
     BaseRunner,
     JaxRunner,
@@ -56,6 +71,13 @@ __all__ = [
     "JobProfile",
     "MapReduceEngine",
     "PendingCounts",
+    "DeviceLostError",
+    "FaultPlan",
+    "FaultSpec",
+    "JobFailedError",
+    "MapperCrashError",
+    "PartialCorruptionError",
+    "RetryPolicy",
     "BaseRunner",
     "SimRunner",
     "JaxRunner",

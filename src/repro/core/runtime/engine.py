@@ -183,11 +183,21 @@ class MapReduceEngine:
             return P()
         return P(*([None] * axis), self.cand_axes)
 
-    def place(self, enc: EncodedDB) -> None:
-        """Shard transaction tensors over the data axes; keep them resident."""
-        for pending, _, _, _ in self._queue:  # handles from a prior DB are void
+    def abandon(self) -> None:
+        """Void every outstanding chunk handle and drop the dispatch queue.
+
+        Used when the placed DB is being replaced (``place``) and on
+        simulated device loss: in-flight results reference buffers on a mesh
+        that no longer exists, so blocked ``result()`` calls must fail
+        loudly instead of fetching from it.
+        """
+        for pending, _, _, _ in self._queue:
             pending._cancelled = True
         self._queue.clear()
+
+    def place(self, enc: EncodedDB) -> None:
+        """Shard transaction tensors over the data axes; keep them resident."""
+        self.abandon()  # handles from a prior DB are void
         shards = self.n_data_shards
         n = enc.n_transactions
         n_padded = ((n + shards - 1) // shards) * shards

@@ -34,6 +34,14 @@ with ``inflight=None``; 0 on runners without a dispatch queue (simulator).
 re-tunes (``inflight=None`` re-samples the depth when a wave's *per-chunk*
 (C, k) work — min(C, cand_block) * k — drifts more than 2x from the shape
 it was tuned on); 0 when auto-sizing is off or no wave ever drifted.
+
+Fault-tolerance telemetry (all zero on a clean run with recovery enabled —
+the fields record what the recovery layer *did*, not what it cost):
+``retries`` counts failed task attempts that were re-run (crashes and
+digest-failed partials), ``speculative_launches`` backup copies launched
+against stragglers, ``speculative_wins`` tasks whose backup finished first
+(the original's duplicate result was discarded), and ``backoff_seconds``
+the cumulative retry backoff the job waited out.
 """
 
 from __future__ import annotations
@@ -58,6 +66,10 @@ class JobProfile:
     mapper_seconds: List[float] = dataclasses.field(default_factory=list)
     inflight_depth: int = 0     # effective async queue depth (engine runners)
     inflight_retunes: int = 0   # cumulative mid-run depth re-tunes (auto mode)
+    retries: int = 0            # failed task attempts that were re-run
+    speculative_launches: int = 0   # straggler backup copies launched
+    speculative_wins: int = 0   # tasks whose backup finished first
+    backoff_seconds: float = 0.0    # cumulative retry backoff waited
 
     @property
     def parallel_seconds(self) -> float:

@@ -28,6 +28,17 @@ dispatch), letting the strategy overlap host-side candidate generation with
 device counting.  ``ShardedRunner`` additionally takes ``cand_axes`` for the
 2-D work decomposition: transactions shard over ``data`` while each wave's
 candidate tensors shard over ``cand`` instead of being replicated.
+
+Fault tolerance (``fault_plan=`` / ``retry=``, see ``runtime/faults.py``):
+``SimRunner`` recovers from task failures the way Hadoop does — every mapper
+attempt is digest-checked and, on a crash or corrupted partial, retried with
+exponential backoff up to ``RetryPolicy.max_attempts``; stragglers get a
+speculative backup copy whose first result wins (the duplicate is discarded,
+so counts stay exactly equal to the sequential reference).  The engine-backed
+runners consult the plan for ``device_loss`` faults at job dispatch and raise
+``DeviceLostError`` — the driver's elastic-restart loop owns recovery.  Every
+runner is a context manager; ``close()`` is guaranteed even when a mapper
+raises mid-job (no leaked process pools).
 """
 
 from __future__ import annotations
@@ -39,6 +50,18 @@ import numpy as np
 
 from repro.core.itemsets import Itemset, apriori_gen, matrix_to_level
 from repro.core.runtime.engine import MapReduceEngine
+from repro.core.runtime.faults import (
+    DEFAULT_RETRY,
+    DeviceLostError,
+    FaultAction,
+    FaultPlan,
+    JobFailedError,
+    MapperCrashError,
+    PartialCorruptionError,
+    RetryPolicy,
+    corrupt_partial,
+    partial_digest,
+)
 from repro.core.runtime.job import CountJob, JobProfile
 from repro.core.sequential import SEQUENTIAL_STORES
 from repro.core.stores import encode_db_from_padded, padded_from_transactions
@@ -130,6 +153,46 @@ def _generate_and_build(store_cls, structure: str, level, child_max_size: int):
     return cands, store, gen_s, time.perf_counter() - t1
 
 
+def _guarded_mapper(action: Optional[FaultAction], fn, args):
+    """Run one mapper task attempt under an optional fault order.
+
+    Returns ``(result, digest)`` where ``digest`` is the integrity hash of
+    the partial counts taken *inside the worker* — corruption is applied
+    after the digest, modelling a torn shuffle transfer, so the host-side
+    re-hash catches it.  Module-level (and ``FaultAction`` a frozen
+    dataclass) so process pools can pickle the whole task.
+    """
+    if action is not None and action.kind == "crash":
+        raise MapperCrashError("injected mapper crash")
+    if action is not None and action.kind == "hang":
+        time.sleep(action.delay)
+    out = fn(*args)
+    digest = partial_digest(out[0])
+    if action is not None and action.kind == "corrupt":
+        out = (corrupt_partial(out[0], action.seed),) + tuple(out[1:])
+    return out, digest
+
+
+class _MapTelemetry:
+    """Per-job recovery counters a mapper wave fills in (-> JobProfile)."""
+
+    __slots__ = ("retries", "speculative_launches", "speculative_wins",
+                 "backoff_seconds")
+
+    def __init__(self) -> None:
+        self.retries = 0
+        self.speculative_launches = 0
+        self.speculative_wins = 0
+        self.backoff_seconds = 0.0
+
+    def fill(self, prof: JobProfile) -> JobProfile:
+        prof.retries = self.retries
+        prof.speculative_launches = self.speculative_launches
+        prof.speculative_wins = self.speculative_wins
+        prof.backoff_seconds = self.backoff_seconds
+        return prof
+
+
 class _Done:
     """Completed-job handle: sync backends return results immediately."""
 
@@ -146,6 +209,25 @@ class BaseRunner:
 
     def describe(self) -> str:
         raise NotImplementedError
+
+    def config_signature(self) -> str:
+        """The backend identity a checkpoint is stamped with.  Unlike
+        ``describe()`` this must be stable across *elastic* changes (mesh
+        shape, mapper slots, executor mode) — resuming on a shrunk mesh is
+        exactly the fault-tolerance story — while still rejecting resumes
+        across a different backend kind, store, or structure."""
+        return self.describe()
+
+    def close(self, wait: bool = True) -> None:
+        """Release runner-owned resources (pools, dispatch queues)."""
+
+    def __enter__(self) -> "BaseRunner":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # A crashed job must not leak pools: close without waiting on
+        # still-running (possibly hung) mapper attempts.
+        self.close(wait=exc_type is None)
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
         raise NotImplementedError
@@ -185,7 +267,9 @@ class SimRunner(BaseRunner):
     supports_async = False
 
     def __init__(self, structure: str = "trie", n_mappers: int = 4,
-                 child_max_size: int = 20, executor=None) -> None:
+                 child_max_size: int = 20, executor=None,
+                 retry: Optional[RetryPolicy] = DEFAULT_RETRY,
+                 fault_plan: Optional[FaultPlan] = None) -> None:
         if structure not in SEQUENTIAL_STORES:
             raise ValueError(f"unknown structure {structure!r}")
         if isinstance(executor, str) and executor not in ("thread", "process"):
@@ -198,6 +282,11 @@ class SimRunner(BaseRunner):
         self.n_mappers = n_mappers
         self.child_max_size = child_max_size
         self.executor = executor
+        # retry=None disables the recovery layer entirely (no digests, no
+        # fault consultation beyond injection) — the pre-fault-tolerance
+        # fast path, kept for the robustness-tax benchmark.
+        self.retry = retry
+        self.fault_plan = fault_plan
         self._pool = None
         self._owns_pool = False
         self._raw: Optional[Sequence[Sequence[int]]] = None
@@ -211,6 +300,12 @@ class SimRunner(BaseRunner):
             return base
         mode = self.executor if isinstance(self.executor, str) else "pool"
         return f"{base}+{mode}"
+
+    def config_signature(self) -> str:
+        # Mapper-slot count and executor mode never change *results*, only
+        # the cost model — a resumed run on a reprovisioned cluster (more or
+        # fewer slots) is legitimate, exactly like Hadoop job restart.
+        return f"sim/{self.structure}"
 
     # -- mapper execution: sequential loop or real concurrency --------------
     def _ensure_pool(self):
@@ -227,21 +322,184 @@ class SimRunner(BaseRunner):
                 self._pool = self.executor
         return self._pool
 
-    def close(self) -> None:
-        """Shut down a pool this runner created (no-op otherwise)."""
+    def close(self, wait: bool = True) -> None:
+        """Shut down a pool this runner created (no-op otherwise).
+
+        ``wait=False`` abandons still-running attempts (a failed job must
+        not block on its own hung stragglers); queued tasks are cancelled.
+        """
         if self._owns_pool and self._pool is not None:
-            self._pool.shutdown()
+            self._pool.shutdown(wait=wait, cancel_futures=True)
             self._pool = None
             self._owns_pool = False
 
-    def _map(self, fn, tasks: List[tuple]) -> List:
+    # -- the task-recovery scheduler ----------------------------------------
+    def _map(self, fn, tasks: List[tuple], k: int = 0,
+             tele: Optional[_MapTelemetry] = None) -> List:
         """Run one job's mapper wave; results come back in mapper-slot order
-        (futures gathered in submission order), so the reduce merge — and
-        therefore every count — is independent of executor scheduling."""
-        if self.executor is None:
+        regardless of executor scheduling, retries, or speculation, so the
+        reduce merge — and therefore every count — is deterministic.
+
+        With ``retry`` set this is a miniature Hadoop task scheduler: each
+        slot's attempt is digest-validated; crashes and corrupted partials
+        are retried with exponential backoff up to ``max_attempts``;
+        stragglers (pooled executors) get a speculative backup whose first
+        result wins.  A job that exhausts a slot's attempts raises
+        ``JobFailedError`` — and in *every* failure mode the runner-owned
+        pool is closed rather than leaked.
+        """
+        tele = tele if tele is not None else _MapTelemetry()
+        try:
+            if self.retry is None:
+                return self._map_plain(fn, tasks, k)
+            if self.executor is None:
+                return self._map_sequential(fn, tasks, k, tele)
+            return self._map_pooled(fn, tasks, k, tele)
+        except BaseException:
+            self.close(wait=False)
+            raise
+
+    def _action(self, k: int, slot: int, attempt: int) -> Optional[FaultAction]:
+        if self.fault_plan is None:
+            return None
+        return self.fault_plan.mapper_action(k=k, slot=slot, attempt=attempt)
+
+    def _map_plain(self, fn, tasks: List[tuple], k: int) -> List:
+        """Recovery disabled: faults (if any) are injected but not caught —
+        a crash propagates and the pool is closed by ``_map``'s guard."""
+        if self.executor is None and self.fault_plan is None:
             return [fn(*args) for args in tasks]
+        if self.executor is None:
+            return [_guarded_mapper(self._action(k, s, 0), fn, args)[0]
+                    for s, args in enumerate(tasks)]
         pool = self._ensure_pool()
-        return [f.result() for f in [pool.submit(fn, *args) for args in tasks]]
+        futs = [pool.submit(_guarded_mapper, self._action(k, s, 0), fn, args)
+                for s, args in enumerate(tasks)]
+        return [f.result()[0] for f in futs]
+
+    def _map_sequential(self, fn, tasks: List[tuple], k: int,
+                        tele: _MapTelemetry) -> List:
+        """Single-threaded recovery loop (the simulated cluster).  A hang
+        longer than the policy timeout models Hadoop's speculative kill:
+        the scheduler waits out the timeout window, charges a speculative
+        launch, and re-runs the attempt instead of sleeping the full hang.
+        """
+        policy = self.retry
+        results = []
+        for slot, args in enumerate(tasks):
+            attempt = 0
+            while True:
+                if attempt >= policy.max_attempts:
+                    raise JobFailedError(
+                        f"mapper slot {slot} of level-{k} job failed "
+                        f"{policy.max_attempts} attempts")
+                action = self._action(k, slot, attempt)
+                if (action is not None and action.kind == "hang"
+                        and policy.speculation and policy.timeout is not None
+                        and action.delay > policy.timeout):
+                    time.sleep(policy.timeout)  # the window the cluster waits
+                    tele.speculative_launches += 1
+                    tele.speculative_wins += 1
+                    attempt += 1
+                    continue
+                try:
+                    out, digest = _guarded_mapper(action, fn, args)
+                    if partial_digest(out[0]) != digest:
+                        raise PartialCorruptionError(
+                            f"slot {slot} partial counts failed digest")
+                    results.append(out)
+                    break
+                except (MapperCrashError, PartialCorruptionError):
+                    tele.retries += 1
+                    attempt += 1
+                    if attempt < policy.max_attempts:
+                        b = policy.backoff * policy.backoff_factor ** (attempt - 1)
+                        tele.backoff_seconds += b
+                        time.sleep(b)
+        return results
+
+    def _map_pooled(self, fn, tasks: List[tuple], k: int,
+                    tele: _MapTelemetry) -> List:
+        """Concurrent recovery scheduler over the executor pool: bounded
+        retry with backoff plus speculative re-execution of stragglers.
+        First result per slot wins; late duplicates are discarded, so the
+        merged counts are exactly the sequential counts."""
+        import concurrent.futures as cf
+
+        policy = self.retry
+        pool = self._ensure_pool()
+        n = len(tasks)
+        results: List = [None] * n
+        settled = [False] * n
+        attempts = [0] * n
+        backups = [False] * n
+        inflight: Dict = {}  # future -> (slot, speculative, t_submit)
+        durations: List[float] = []
+
+        def submit(slot: int, speculative: bool = False) -> None:
+            action = self._action(k, slot, attempts[slot])
+            attempts[slot] += 1
+            fut = pool.submit(_guarded_mapper, action, fn, tasks[slot])
+            inflight[fut] = (slot, speculative, time.perf_counter())
+
+        def straggler_threshold() -> Optional[float]:
+            if policy.timeout is not None:
+                return policy.timeout
+            if not policy.speculation or len(durations) < max(1, n // 2):
+                return None  # not enough signal for the dynamic threshold
+            med = float(np.median(durations))
+            return max(policy.speculation_min_wait,
+                       policy.speculation_factor * med)
+
+        for slot in range(n):
+            submit(slot)
+        while not all(settled):
+            done, _ = cf.wait(list(inflight), timeout=0.02,
+                              return_when=cf.FIRST_COMPLETED)
+            for fut in done:
+                slot, speculative, t0 = inflight.pop(fut)
+                try:
+                    out, digest = fut.result()
+                    if partial_digest(out[0]) != digest:
+                        raise PartialCorruptionError(
+                            f"slot {slot} partial counts failed digest")
+                except (MapperCrashError, PartialCorruptionError):
+                    if settled[slot]:
+                        continue  # another attempt already delivered
+                    tele.retries += 1
+                    others = any(s == slot for s, _, _ in inflight.values())
+                    if attempts[slot] >= policy.max_attempts:
+                        if others:
+                            continue  # a live attempt may still save the slot
+                        raise JobFailedError(
+                            f"mapper slot {slot} of level-{k} job failed "
+                            f"{policy.max_attempts} attempts")
+                    b = policy.backoff * policy.backoff_factor ** (
+                        attempts[slot] - 1)
+                    tele.backoff_seconds += b
+                    time.sleep(b)
+                    backups[slot] = False  # the retry may straggle anew
+                    submit(slot)
+                    continue
+                if not settled[slot]:  # first result wins
+                    settled[slot] = True
+                    results[slot] = out
+                    durations.append(time.perf_counter() - t0)
+                    if speculative:
+                        tele.speculative_wins += 1
+                # else: duplicate from original/backup race — discarded
+            threshold = straggler_threshold()
+            if threshold is None:
+                continue
+            now = time.perf_counter()
+            for fut, (slot, _, t0) in list(inflight.items()):
+                if (not settled[slot] and not backups[slot]
+                        and now - t0 > threshold
+                        and attempts[slot] < policy.max_attempts):
+                    backups[slot] = True
+                    tele.speculative_launches += 1
+                    submit(slot, speculative=True)
+        return results
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
         self._raw = transactions
@@ -252,8 +510,10 @@ class SimRunner(BaseRunner):
     # -- Job1: OneItemsetMapper + combiner + reducer (Algorithm 2) ----------
     def job1(self) -> Tuple[np.ndarray, JobProfile]:
         t_job = time.perf_counter()
+        tele = _MapTelemetry()
         results = self._map(
-            _job1_mapper, [(c,) for c in _chunks(self._raw, self.n_mappers)]
+            _job1_mapper, [(c,) for c in _chunks(self._raw, self.n_mappers)],
+            k=1, tele=tele,
         )
         partials = [local for local, _ in results]
         mapper_times = [sec for _, sec in results]
@@ -263,12 +523,12 @@ class SimRunner(BaseRunner):
             for item, c in local.items():
                 hist[item] += c
         reduce_s = time.perf_counter() - t0
-        prof = JobProfile(
+        prof = tele.fill(JobProfile(
             k=1, n_candidates=int(np.count_nonzero(hist)),
             seconds=time.perf_counter() - t_job,
             count_seconds=max(mapper_times, default=0.0),
             reduce_seconds=reduce_s, mapper_seconds=mapper_times,
-        )
+        ))
         return hist, prof
 
     def place(self, item_map: np.ndarray) -> None:
@@ -292,11 +552,12 @@ class SimRunner(BaseRunner):
                                     if job.cand.size else job.cand)
         level = matrix_to_level(self._item_map[job.level]) if (
             job.level is not None and job.level.size) else None
+        tele = _MapTelemetry()
         results = self._map(_job2_mapper, [
             (chunk, self.store_cls, self.structure, self.child_max_size,
              level, cand_rows)
             for chunk in self._chunks_raw
-        ])
+        ], k=job.k, tele=tele)
         partials = [local for local, _, _, _, _ in results]
         gen_times = [g for _, g, _, _, _ in results]
         build_times = [b for _, _, b, _, _ in results]
@@ -311,14 +572,14 @@ class SimRunner(BaseRunner):
                 if i is not None:
                     counts[i] += c
         reduce_s = time.perf_counter() - t0
-        prof = JobProfile(
+        prof = tele.fill(JobProfile(
             k=job.k, n_candidates=len(cand_rows),
             seconds=time.perf_counter() - t_job,
             gen_seconds=max(gen_times, default=0.0),
             build_seconds=max(build_times, default=0.0),
             count_seconds=max(count_times, default=0.0),
             reduce_seconds=reduce_s, mapper_seconds=mapper_times,
-        )
+        ))
         return counts, prof
 
 
@@ -361,7 +622,8 @@ class JaxRunner(BaseRunner):
                  cand_block: int = 32_768, inflight: Optional[int] = 1,
                  mesh=None, data_axes: Tuple[str, ...] = ("data",),
                  cand_axes: Tuple[str, ...] = (),
-                 encode_ahead: int = 2) -> None:
+                 encode_ahead: int = 2,
+                 fault_plan: Optional[FaultPlan] = None) -> None:
         # inflight=None => auto-size the queue depth from the first clean
         # chunk's measured device latency vs host dispatch time (engine).
         # encode_ahead = how many chunks may sit fully encoded on device
@@ -371,6 +633,7 @@ class JaxRunner(BaseRunner):
             block_n=block_n, cand_block=cand_block, inflight=inflight,
             encode_ahead=encode_ahead,
         )
+        self.fault_plan = fault_plan
         self._padded_raw: Optional[np.ndarray] = None
         self._n_raw = 0
 
@@ -379,6 +642,18 @@ class JaxRunner(BaseRunner):
         if self.engine.cand_axes:
             base += f"/c{self.engine.n_cand_shards}"
         return base
+
+    def config_signature(self) -> str:
+        # No mesh geometry: an elastic restart legitimately resumes the same
+        # logical run on a shrunk data x cand grid (counts are bit-identical
+        # on every mesh shape — the sharding parity suites pin that).
+        return f"{self.kind}/{self.engine.store_name}"
+
+    def close(self, wait: bool = True) -> None:
+        """Abandon the engine's outstanding dispatch queue (chunk results
+        still in flight hold device buffers; an elastic restart must drop
+        them before the replacement mesh is built)."""
+        self.engine.abandon()
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
         # The single host pass over the raw lists; everything downstream
@@ -415,6 +690,14 @@ class JaxRunner(BaseRunner):
         self.engine.place(encode_db_from_padded(dense, n_items=f))
 
     def count_async(self, job: CountJob) -> _JaxPending:
+        if self.fault_plan is not None:
+            spec = self.fault_plan.device_loss(k=job.k)
+            if spec is not None:
+                # Simulated device loss at job dispatch: outstanding work is
+                # abandoned (the real failure mode voids it too) and the
+                # driver's elastic-restart loop owns recovery.
+                self.engine.abandon()
+                raise DeviceLostError(lost=spec.lost, k=job.k)
         t0 = time.perf_counter()
         pending = self.engine.count_candidates_async(job.cand)
         return _JaxPending(self, job, pending, time.perf_counter() - t0)
@@ -438,26 +721,30 @@ class ShardedRunner(JaxRunner):
                  data_axes: Tuple[str, ...] = ("data",),
                  cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
                  cand_block: int = 32_768, inflight: Optional[int] = 1,
-                 encode_ahead: int = 2) -> None:
+                 encode_ahead: int = 2,
+                 fault_plan: Optional[FaultPlan] = None) -> None:
         if mesh is None:
             from repro.launch.mesh import make_data_cand_mesh, make_data_mesh
 
             mesh = make_data_cand_mesh() if cand_axes else make_data_mesh()
         super().__init__(store=store, block_n=block_n, cand_block=cand_block,
                          inflight=inflight, mesh=mesh, data_axes=data_axes,
-                         cand_axes=cand_axes, encode_ahead=encode_ahead)
+                         cand_axes=cand_axes, encode_ahead=encode_ahead,
+                         fault_plan=fault_plan)
 
 
 def make_runner(store: str = "perfect_hash", mesh=None,
                 data_axes: Tuple[str, ...] = ("data",),
                 cand_axes: Tuple[str, ...] = (), block_n: int = 2048,
                 cand_block: int = 32_768, inflight: Optional[int] = 1,
-                encode_ahead: int = 2) -> BaseRunner:
+                encode_ahead: int = 2,
+                fault_plan: Optional[FaultPlan] = None) -> BaseRunner:
     """Default runner selection for drivers: mesh => sharded, else single."""
     if mesh is not None or cand_axes:
         return ShardedRunner(store=store, mesh=mesh, data_axes=data_axes,
                              cand_axes=cand_axes, block_n=block_n,
                              cand_block=cand_block, inflight=inflight,
-                             encode_ahead=encode_ahead)
+                             encode_ahead=encode_ahead, fault_plan=fault_plan)
     return JaxRunner(store=store, block_n=block_n, cand_block=cand_block,
-                     inflight=inflight, encode_ahead=encode_ahead)
+                     inflight=inflight, encode_ahead=encode_ahead,
+                     fault_plan=fault_plan)

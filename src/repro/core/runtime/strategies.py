@@ -144,6 +144,8 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
         frequent: Dict[Itemset, int] = {}
         encode_s = count_s = reduce_s = build_s = runner_gen_s = 0.0
         inflight_depth = inflight_retunes = 0
+        retries = spec_launches = spec_wins = 0
+        backoff_s = 0.0
         mappers: List[float] = []
         for wave, pending in zip(waves, pendings):
             counts, prof = pending.result()
@@ -154,6 +156,10 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
             reduce_s += prof.reduce_seconds
             build_s += prof.build_seconds
             runner_gen_s += prof.gen_seconds
+            retries += prof.retries
+            spec_launches += prof.speculative_launches
+            spec_wins += prof.speculative_wins
+            backoff_s += prof.backoff_seconds
             inflight_depth = max(inflight_depth, prof.inflight_depth)
             # Cumulative engine counter: the latest wave carries the total.
             inflight_retunes = max(inflight_retunes, prof.inflight_retunes)
@@ -172,7 +178,9 @@ def _combined(runner, level, min_count, start_k, max_k, should_extend):
             gen_seconds=gen_s, build_seconds=build_s, encode_seconds=encode_s,
             count_seconds=count_s, reduce_seconds=reduce_s,
             mapper_seconds=mappers, inflight_depth=inflight_depth,
-            inflight_retunes=inflight_retunes,
+            inflight_retunes=inflight_retunes, retries=retries,
+            speculative_launches=spec_launches, speculative_wins=spec_wins,
+            backoff_seconds=backoff_s,
         )
         yield stats, frequent
         top_k = max((len(s) for s in frequent), default=0)
