@@ -1,8 +1,10 @@
 """Unified runtime: sync vs async double-buffered wave dispatch, the
 encode/count pipeline overlap (phase walls vs overlapped wall), Job1
-host-loop vs device histogram, and the cross-backend JobProfile comparison
-table (sim / jax / sharded x structure / store x k) — with
-bit-identical-results checks inline."""
+host-loop vs device histogram, the cross-backend JobProfile comparison
+table (sim / jax / sharded x structure / store x k), and the device-resident
+level-ladder suite (fused gen->encode->count->prune vs the host SPC loop,
+with on-device trimming, the encoded-dataset cache, and checkpoint-restore
+latency) — with bit-identical-results checks inline."""
 
 from __future__ import annotations
 
@@ -18,6 +20,14 @@ WAVE_STORE = "packed_bitmap"
 CAND_BLOCK = 512  # small chunks so one C2 wave streams as many dispatches
 TABLE_SUPPORT = 0.02  # cross-backend table: same workload for every backend
 TABLE_MAX_K = 6
+# The ladder suite mines deeper than the cross-backend table: at 0.02 the
+# C2 wave is small enough that per-level dispatch overhead, not counting,
+# dominates and trimming has nothing to shrink.  A lower support gives a
+# real C2 wave (hundreds of frequent pairs) — exactly the regime the fused
+# single-dispatch ladder and the on-device column trim are built for.  At
+# the CI quick scale (N=1000) 0.01 means min_count=10 and the lattice blows
+# up (~26 s/mine on the host loop), so quick runs step up to 0.015.
+LADDER_SUPPORT = 0.01 if SCALE >= 0.05 else 0.015
 
 
 def _table_backends():
@@ -252,4 +262,122 @@ def run() -> list:
         f"spec={sum(p.speculative_launches for p in res_faulted.levels)}"
         f"/{sum(p.speculative_wins for p in res_faulted.levels)};"
         f"identical_to_clean=True"))
+
+    # -- device-resident level ladder (fused gen->encode->count->prune) -----
+    out.extend(run_level_ladder())
+    return out
+
+
+def run_level_ladder() -> list:
+    """The fused device-resident level ladder vs the host SPC loop, plus the
+    encoded-dataset cache and checkpoint-restore latency rows.
+
+    Every fused variant is hard-checked bit-identical (itemsets AND
+    supports) against the host loop before anything is timed; trimming's
+    per-level (Npad, Fpad) shrink is recorded via the profile rows and a
+    monotonicity flag.  Measurement is interleaved min-of-N over persistent
+    miners (runner jit caches stay warm, exactly how a sweep re-mines)."""
+    import tempfile
+
+    from repro.core import FrequentItemsetMiner
+    from repro.core.runtime import DATASET_CACHE
+    from repro.launch.mesh import make_data_mesh
+
+    db = paper_datasets(scale=SCALE)["T10I4D100K"]
+    out = []
+    mk = dict(min_support=LADDER_SUPPORT, max_k=TABLE_MAX_K)
+    miners = [
+        ("host_loop", FrequentItemsetMiner(
+            runner=JaxRunner(store=WAVE_STORE), **mk)),
+        ("fused", FrequentItemsetMiner(
+            runner=JaxRunner(store=WAVE_STORE), device_loop=True,
+            trim=False, **mk)),
+        ("fused_trim", FrequentItemsetMiner(
+            runner=JaxRunner(store=WAVE_STORE), device_loop=True,
+            trim=True, **mk)),
+        ("sharded_host_loop", FrequentItemsetMiner(
+            runner=ShardedRunner(store=WAVE_STORE, mesh=make_data_mesh()),
+            **mk)),
+        ("sharded_fused_trim", FrequentItemsetMiner(
+            runner=ShardedRunner(store=WAVE_STORE, mesh=make_data_mesh()),
+            device_loop=True, trim=True, **mk)),
+    ]
+    # Warm-up mine per variant: compiles the ladder jits AND pins parity.
+    results = {name: m.mine(db) for name, m in miners}
+    ref = results["host_loop"].itemsets
+    for name, res in results.items():
+        assert res.itemsets == ref, f"{name} diverged from host loop"
+    secs = {name: float("inf") for name, _ in miners}
+    for _ in range(5):  # interleaved so load drift hits every variant equally
+        for name, m in miners:
+            res, sec = timed(m.mine, db)
+            secs[name] = min(secs[name], sec)
+            results[name] = res  # warm profiles (no compile in the walls)
+    host_s = secs["host_loop"]
+    for name, _ in miners:
+        meta = (f"frequent={len(ref)};store={WAVE_STORE};"
+                f"jobs={len(results[name].levels)}")
+        if name != "host_loop":
+            meta += f";speedup_vs_host={host_s / secs[name]:.2f}x"
+        out.append(row(f"runtime/level_ladder/{name}", secs[name] * 1e6, meta))
+
+    # Per-level fused+trim profile rows: Npad/Fpad ride profile_meta, so the
+    # persisted json holds the whole shrink trajectory.
+    pads = []
+    for prof in results["fused_trim"].levels:
+        if not prof.n_pad:
+            continue
+        pads.append((prof.n_pad, prof.f_pad))
+        out.append(row(f"runtime/level_ladder/profile/fused_trim/k{prof.k}",
+                       prof.seconds * 1e6, profile_meta(prof)))
+    if pads:
+        monotone = all(a[0] >= b[0] and a[1] >= b[1]
+                       for a, b in zip(pads, pads[1:]))
+        trim_s = sum(p.reduce_seconds
+                     for p in results["fused_trim"].levels if p.n_pad)
+        out.append(row(
+            "runtime/level_ladder/trim_overhead", trim_s * 1e6,
+            f"levels={len(pads)};Npad={pads[0][0]}->{pads[-1][0]};"
+            f"Fpad={pads[0][1]}->{pads[-1][1]};monotone_ok={monotone}"))
+
+    # -- encoded-dataset cache: place() cold vs warm ------------------------
+    runner = JaxRunner(store=WAVE_STORE)
+    runner.ingest(db)
+    hist, _ = runner.job1()
+    min_count = max(1, int(np.ceil(TABLE_SUPPORT * len(db))))
+    item_map = np.nonzero(hist >= min_count)[0].astype(np.int64)
+    DATASET_CACHE.clear()
+    _, cold_s = timed(runner.place, item_map)
+    assert DATASET_CACHE.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    _, warm_s = timed(runner.place, item_map, repeat=5)
+    assert DATASET_CACHE.stats()["hits"] == 5
+    out.append(row("runtime/encode_cache_miss", cold_s * 1e6,
+                   f"N={len(db)};F={len(item_map)}"))
+    out.append(row("runtime/encode_cache_hit", warm_s * 1e6,
+                   f"speedup_vs_miss={cold_s / warm_s:.2f}x"))
+
+    # -- checkpoint restore latency (standalone-read idiom) ------------------
+    # One fused+trimmed mine writes the per-level snapshots; the rows time a
+    # cold read of the newest valid snapshot (raw load) and the miner's full
+    # validated restore (digest checks + config stamp + dense remap).
+    from repro.distributed import checkpoint as ckpt
+
+    with tempfile.TemporaryDirectory() as d:
+        m = FrequentItemsetMiner(store=WAVE_STORE, device_loop=True,
+                                 trim=True, checkpoint_dir=d, **mk)
+        assert m.mine(db).itemsets == ref
+        (_, step, extra), load_s = timed(ckpt.load, d, repeat=5)
+        out.append(row("runtime/checkpoint_read", load_s * 1e6,
+                       f"step={step};levels={len(extra['levels'])};"
+                       f"itemsets={len(extra['itemsets'])}"))
+        m2 = FrequentItemsetMiner(store=WAVE_STORE, device_loop=True,
+                                  trim=True, checkpoint_dir=d, **mk)
+        config = m2._config(m2._make_runner())
+        ladder_count = max(1, int(np.ceil(LADDER_SUPPORT * len(db))))
+        state, restore_s = timed(m2._try_restore, len(db), ladder_count,
+                                 config, repeat=5)
+        assert state is not None
+        out.append(row("runtime/checkpoint_restore", restore_s * 1e6,
+                       f"resume_k={state[3]};"
+                       f"speedup_read_only={restore_s / load_s:.2f}x"))
     return out

@@ -41,6 +41,11 @@ def profile_meta(prof) -> str:
     ]
     if prof.mapper_seconds:
         parts.append(f"mappers={len(prof.mapper_seconds)}")
+    # Device-ladder telemetry: the padded dims the level was counted over
+    # (shrinks per level when on-device trimming is enabled).
+    if getattr(prof, "n_pad", 0):
+        parts.append(f"Npad={prof.n_pad}")
+        parts.append(f"Fpad={prof.f_pad}")
     if prof.inflight_depth:
         parts.append(f"inflight={prof.inflight_depth}")
     if prof.inflight_retunes:

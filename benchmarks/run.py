@@ -180,6 +180,9 @@ def main() -> None:
         "stores_jax": bench_stores_jax.run,
         "strategies": bench_strategies.run,
         "runtime": bench_runtime.run,
+        # The ladder rows alone (they also ride the full runtime suite) —
+        # the quick CI check that fused == host loop and trimming shrinks.
+        "level_ladder": bench_runtime.run_level_ladder,
         # Suite mode persists BENCH_paper_smoke.json — the committed
         # BENCH_paper.json parity certificate is written only by the
         # dedicated `benchmarks/bench_paper.py [--quick]` CLI.

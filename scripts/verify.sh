@@ -40,6 +40,25 @@ for runner in [
 print("runner parity smoke OK (sim == jax == sharded == brute force)")
 PY
 
+echo "== smoke: device ladder (fused gen->count->prune + on-device trim) =="
+python - <<'PY'
+import numpy as np
+from repro.core import FrequentItemsetMiner, brute_force_frequent
+from repro.data import quest_generator
+
+db = quest_generator(n_transactions=150, avg_transaction_len=6, n_items=40,
+                     n_patterns=25, seed=11)
+oracle = brute_force_frequent(db, int(np.ceil(0.06 * len(db))))
+for trim in (False, True):
+    res = FrequentItemsetMiner(min_support=0.06, store="packed_bitmap",
+                               device_loop=True, trim=trim).mine(db)
+    assert res.itemsets == oracle, f"device_loop trim={trim} diverged"
+pads = [(p.n_pad, p.f_pad) for p in res.levels if p.n_pad]
+assert all(a[0] >= b[0] and a[1] >= b[1] for a, b in zip(pads, pads[1:])), pads
+print("device-ladder smoke OK (fused == fused+trim == brute force), "
+      "Npad/Fpad per level:", pads)
+PY
+
 echo "== smoke: 2-D data x cand mesh parity (forced 8 host devices) =="
 # Candidate-axis sharding must be bit-identical to the replicated path; run
 # in a subprocess so XLA_FLAGS takes effect before jax initializes.

@@ -28,6 +28,7 @@ across backends.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -80,6 +81,8 @@ class FrequentItemsetMiner:
         checkpoint_dir: Optional[str] = None,
         runner: Optional[BaseRunner] = None,
         elastic_restarts: int = 2,
+        device_loop: bool = False,
+        trim: bool = True,
     ) -> None:
         if runner is not None and (
             any(v is not None
@@ -109,6 +112,15 @@ class FrequentItemsetMiner:
         # Encode-stage lookahead (chunks encoded on device ahead of their
         # count dispatch); None keeps the engine's double-buffered default.
         self.encode_ahead = encode_ahead if encode_ahead is not None else 2
+        if device_loop and strategy != "spc":
+            # The ladder *is* the SPC schedule fused on device — FPC/DPC's
+            # speculative combined waves have no fused counterpart.
+            raise ValueError(
+                "device_loop=True fuses the SPC level loop on device; "
+                f"it cannot run the {strategy!r} strategy"
+            )
+        self.device_loop = device_loop
+        self.trim = trim
         self.checkpoint_dir = checkpoint_dir
         self.runner = runner
         # How many simulated device losses a single mine() survives before
@@ -130,7 +142,9 @@ class FrequentItemsetMiner:
         uses ``config_signature()`` (not ``describe()``) so an *elastic*
         restart — same backend kind and store, shrunk mesh — still resumes."""
         return {"runner": runner.config_signature(),
-                "strategy": self.strategy, "max_k": self.max_k}
+                "strategy": self.strategy, "max_k": self.max_k,
+                "device_loop": bool(self.device_loop),
+                "trim": bool(self.device_loop and self.trim)}
 
     # ------------------------------------------------------------------
     def mine(self, transactions: Sequence[Sequence[int]]) -> MiningResult:
@@ -208,7 +222,16 @@ class FrequentItemsetMiner:
         # candidate may contain an infrequent item) and make the DB resident.
         runner.place(item_map)
 
-        combiner = strategies.get(self.strategy)
+        if self.device_loop:
+            # Fused device-resident level loop: one compiled dispatch per
+            # level, per-level state never leaving the device.  Yields the
+            # same (JobProfile, {itemset: count}) stream as the strategies,
+            # so checkpointing and restore below are untouched.
+            from repro.core.runtime import device_loop as _dl
+
+            combiner = functools.partial(_dl.ladder, trim=self.trim)
+        else:
+            combiner = strategies.get(self.strategy)
         # Levels enter (and stay in) matrix form inside the strategy loop;
         # tuples only reappear in the yielded result dicts.
         for stats, freq_dense in combiner(

@@ -25,6 +25,16 @@ chunks, in-chunk combiner, global reducer.  This package owns that shape:
     The level-wise wave schedulers (SPC/FPC/DPC), threaded through the
     runners' pipelined ``count_async`` API.
 
+``device_loop.py``
+    The device-resident level ladder: gen -> encode -> count -> prune fused
+    into one compiled dispatch per level, with on-device transaction
+    trimming between levels (the fused alternative to the SPC host loop,
+    behind the miner's ``device_loop=`` knob).
+
+``cache.py``
+    The shared encoded-dataset cache (``DATASET_CACHE``) the engine-backed
+    runners serve ``place()`` through, keyed by pure content digests.
+
 ``faults.py``
     Deterministic seeded fault injection (``FaultPlan``/``FaultSpec``) plus
     the Hadoop-style ``RetryPolicy`` (bounded retry with exponential
@@ -42,6 +52,18 @@ own job loops; they ingest data, pick a runner, and iterate a strategy.
 """
 
 from repro.core.runtime.job import CountJob, JobProfile
+from repro.core.runtime.cache import (
+    DATASET_CACHE,
+    EncodedDatasetCache,
+    dataset_digest,
+)
+from repro.core.runtime.device_loop import (
+    LevelLadder,
+    apriori_gen_device,
+    filter_candidates_device,
+    join_pair_count,
+    ladder,
+)
 from repro.core.runtime.engine import MapReduceEngine, PendingCounts
 from repro.core.runtime.faults import (
     DeviceLostError,
@@ -69,6 +91,14 @@ from repro.core.runtime.sweep import (
 __all__ = [
     "CountJob",
     "JobProfile",
+    "DATASET_CACHE",
+    "EncodedDatasetCache",
+    "dataset_digest",
+    "LevelLadder",
+    "apriori_gen_device",
+    "filter_candidates_device",
+    "join_pair_count",
+    "ladder",
     "MapReduceEngine",
     "PendingCounts",
     "DeviceLostError",

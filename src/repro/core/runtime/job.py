@@ -70,6 +70,11 @@ class JobProfile:
     speculative_launches: int = 0   # straggler backup copies launched
     speculative_wins: int = 0   # tasks whose backup finished first
     backoff_seconds: float = 0.0    # cumulative retry backoff waited
+    # Device-resident ladder telemetry: the padded transaction count and item
+    # columns the level was counted over (shrinks per level with trimming;
+    # 0 on the host-loop paths, which never resize the placed DB).
+    n_pad: int = 0
+    f_pad: int = 0
 
     @property
     def parallel_seconds(self) -> float:

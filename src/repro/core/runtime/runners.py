@@ -48,7 +48,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.itemsets import Itemset, apriori_gen, matrix_to_level
+from repro.core.itemsets import (
+    Itemset,
+    apriori_gen,
+    filter_candidates_matrix,
+    matrix_to_level,
+)
 from repro.core.runtime.engine import MapReduceEngine
 from repro.core.runtime.faults import (
     DEFAULT_RETRY,
@@ -248,6 +253,13 @@ class BaseRunner:
 
     def count(self, job: CountJob) -> Tuple[np.ndarray, JobProfile]:
         return self.count_async(job).result()
+
+    def filter_candidates(self, cand: np.ndarray,
+                          level_mat: np.ndarray) -> np.ndarray:
+        """Keep the rows of ``cand`` whose every (k-1)-subset is in
+        ``level_mat`` — the SPC cut-back after a speculative FPC/DPC wave.
+        Backends with a device may override with a jit-compiled filter."""
+        return filter_candidates_matrix(cand, level_mat)
 
 
 class SimRunner(BaseRunner):
@@ -636,6 +648,7 @@ class JaxRunner(BaseRunner):
         self.fault_plan = fault_plan
         self._padded_raw: Optional[np.ndarray] = None
         self._n_raw = 0
+        self._raw_digest: Optional[str] = None
 
     def describe(self) -> str:
         base = f"{self.kind}/{self.engine.store_name}"
@@ -659,6 +672,7 @@ class JaxRunner(BaseRunner):
         # The single host pass over the raw lists; everything downstream
         # (Job1, dense re-encode, counting) is vectorized or on device.
         self._padded_raw, self._n_raw = padded_from_transactions(transactions)
+        self._raw_digest = None  # lazily computed on first place()
 
     def job1(self) -> Tuple[np.ndarray, JobProfile]:
         t0 = time.perf_counter()
@@ -671,6 +685,24 @@ class JaxRunner(BaseRunner):
         return hist, prof
 
     def place(self, item_map: np.ndarray) -> None:
+        """Dense re-encode over the frequent items, served through the shared
+        encoded-dataset cache: the ``EncodedDB`` is keyed by pure content
+        (raw-DB digest, store, f_pad, item-map digest), so re-mining the same
+        (dataset, support) cell — benchmark rounds, sweep repeats, restarted
+        miners — skips the host-side encode entirely."""
+        from repro.core.runtime.cache import DATASET_CACHE, dataset_digest
+
+        if self._raw_digest is None:
+            self._raw_digest = dataset_digest(self._padded_raw)
+        item_arr = np.asarray(item_map, np.int64)
+        f = len(item_arr)
+        f_pad = ((f // 128) + 1) * 128  # EncodedDB's padded item-column count
+        key = (self._raw_digest, self.engine.store_name, f_pad,
+               dataset_digest(item_arr))
+        enc = DATASET_CACHE.get_or_build(key, lambda: self._encode(item_arr))
+        self.engine.place(enc)
+
+    def _encode(self, item_map: np.ndarray):
         """Vectorized dense re-encode over the frequent items (Apriori
         property: no candidate may contain an infrequent item)."""
         padded, n_raw = self._padded_raw, self._n_raw
@@ -679,7 +711,7 @@ class JaxRunner(BaseRunner):
         if f:
             lookup[np.asarray(item_map, np.int64)] = np.arange(f, dtype=np.int32)
         dense = lookup[np.minimum(padded, n_raw)]  # infrequent/pad -> ITEM_PAD
-        dense.sort(axis=1)  # rows stay unique-sorted; ITEM_PAD collects at end
+        dense = np.sort(dense, axis=1)  # unique-sorted; ITEM_PAD collects at end
         width = int((dense < ITEM_PAD).sum(axis=1).max()) if dense.size else 0
         # Clamp to a lane-friendly minimum, but never past the actual column
         # count — max(8, width) alone promises 8 columns the slice below
@@ -687,7 +719,22 @@ class JaxRunner(BaseRunner):
         # single-item DBs), leaving downstream shapes out of sync.
         width = min(dense.shape[1], max(8, width))
         dense = np.ascontiguousarray(dense[:, :width])
-        self.engine.place(encode_db_from_padded(dense, n_items=f))
+        return encode_db_from_padded(dense, n_items=f)
+
+    def filter_candidates(self, cand: np.ndarray,
+                          level_mat: np.ndarray) -> np.ndarray:
+        """SPC cut-back on device: one jit-compiled membership test instead
+        of the host's per-row Python subset loop (same rows, same order)."""
+        from repro.core.runtime.device_loop import filter_candidates_device
+
+        return filter_candidates_device(cand, level_mat)
+
+    def level_ladder(self, min_count: int, trim: bool = True):
+        """The fused device-resident level loop (``runtime/device_loop.py``):
+        gen -> encode -> count -> prune compiled into one dispatch per level,
+        with optional on-device transaction trimming between levels."""
+        return self.engine.level_ladder(min_count, trim=trim,
+                                        fault_plan=self.fault_plan)
 
     def count_async(self, job: CountJob) -> _JaxPending:
         if self.fault_plan is not None:

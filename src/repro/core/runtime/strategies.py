@@ -38,7 +38,6 @@ import numpy as np
 from repro.core.itemsets import (
     Itemset,
     apriori_gen_matrix,
-    filter_candidates_matrix,
     level_to_matrix,
 )
 from repro.core.runtime.job import CountJob, JobProfile
@@ -86,8 +85,10 @@ def spc(runner, level, min_count: int, start_k: int, max_k: int):
             next_cand = np.zeros((0, mat.shape[1] + 2), np.int32)
         elif spec is not None:
             # Exact cut back to apriori_gen_matrix(L_k): keep a speculative
-            # row iff all its k-subsets are frequent.
-            next_cand = filter_candidates_matrix(spec, freq_mat)
+            # row iff all its k-subsets are frequent.  The runner picks the
+            # implementation — host subset loop, or the jit-compiled
+            # membership filter on device-backed runners.
+            next_cand = runner.filter_candidates(spec, freq_mat)
         else:
             next_cand = apriori_gen_matrix(freq_mat)
         next_gen_s = spec_s + time.perf_counter() - tg

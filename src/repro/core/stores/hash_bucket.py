@@ -28,6 +28,16 @@ class HashBucketStore:
         return {"bitmap": enc.bitmap, "t_hash": t_hash.astype(np.int32)}
 
     @classmethod
+    def device_transaction_inputs(cls, padded, bitmap) -> dict:
+        """jit-safe twin of ``transaction_inputs`` over the device-resident
+        (N, L) padded ids + (N, F_pad) bitmap pair — the level ladder rebuilds
+        the store tensors on device after every trim (item ids shift, so the
+        routing hashes must be recomputed from the remapped rows)."""
+        t_hash = jnp.where(padded == ITEM_PAD, -1,
+                           padded % cls.child_max_size).astype(jnp.int32)
+        return {"bitmap": bitmap, "t_hash": t_hash}
+
+    @classmethod
     def encode_candidates(cls, cand: jnp.ndarray, *, f_pad: int) -> dict:
         bucket = (cand[:, 0] % cls.child_max_size).astype(jnp.int32)
         return {"cand": cand, "cand_bucket": bucket}

@@ -47,6 +47,19 @@ class PackedBitmapStore:
     def transaction_inputs(enc: EncodedDB) -> dict:
         return {"packed": enc.packed}
 
+    @staticmethod
+    def device_transaction_inputs(padded, bitmap) -> dict:
+        """jit-safe twin of ``transaction_inputs`` over the device-resident
+        (N, L) padded ids + (N, F_pad) bitmap pair — the level ladder rebuilds
+        the store tensors on device after every trim.  The lane weights are
+        distinct powers of two, so the sum over the 32-lane axis equals the
+        bitwise OR of ``base.pack_bitmap`` bit for bit."""
+        n, f = bitmap.shape
+        lanes = bitmap.reshape(n, f // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+        weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+        packed = jnp.sum(lanes * weights, axis=2, dtype=jnp.uint32)
+        return {"packed": packed}
+
     @classmethod
     def encode_candidates(cls, cand: jnp.ndarray, *, f_pad: int) -> dict:
         """Emit only the layout the active counting path reads: the Pallas

@@ -23,6 +23,13 @@ class PerfectHashStore:
         return {"bitmap": enc.bitmap}
 
     @staticmethod
+    def device_transaction_inputs(padded, bitmap) -> dict:
+        """jit-safe twin of ``transaction_inputs`` over the device-resident
+        (N, L) padded ids + (N, F_pad) bitmap pair — the level ladder rebuilds
+        the store tensors on device after every trim."""
+        return {"bitmap": bitmap}
+
+    @staticmethod
     def encode_candidates(cand: "jnp.ndarray", *, f_pad: int) -> dict:
         return {"cand": cand}
 

@@ -2,6 +2,8 @@
 wave determinism, candidate-axis sharding, executor-pooled SimRunner,
 device-side Job1, degenerate DBs, checkpoint config stamp."""
 
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -614,9 +616,231 @@ def test_checkpoint_rejects_mismatched_config(tmp_path, t10_db, oracle):
                              checkpoint_dir=d),
         FrequentItemsetMiner(min_support=MIN_SUPPORT, checkpoint_dir=d,
                              runner=SimRunner(structure="trie")),
+        FrequentItemsetMiner(min_support=MIN_SUPPORT, checkpoint_dir=d,
+                             device_loop=True),  # fused loop != host loop
     ]:
         assert other._try_restore(n, mc, other._config(other._make_runner())) \
             is None
         res = other.mine(t10_db)  # recomputes from scratch, still correct
         if other.max_k >= r1.max_k:
             assert res.itemsets == oracle
+
+
+# -- device-resident level ladder (fused gen->encode->count->prune) ----------
+def _deep_db():
+    """Correlated DB with n_items > 128 so trimming can shrink every padded
+    dimension (N_pad, F_pad, row width) and the ladder runs to k >= 4."""
+    rng = np.random.default_rng(11)
+    n_items = 300
+    pats = [sorted(rng.choice(n_items, size=5, replace=False))
+            for _ in range(4)]
+    db = []
+    for _ in range(400):
+        t = set()
+        if rng.random() < 0.5:
+            t |= set(pats[rng.integers(4)])
+        t |= set(rng.choice(n_items, size=rng.integers(2, 8)).tolist())
+        db.append(sorted(t))
+    return db
+
+
+@pytest.fixture(scope="module")
+def deep_db():
+    return _deep_db()
+
+
+@pytest.fixture(scope="module")
+def deep_oracle(deep_db):
+    return brute_force_frequent(deep_db, int(np.ceil(0.08 * len(deep_db))))
+
+
+def _mined_levels(t10_db):
+    """Real level matrices (dense ids) from a host-loop mine, per k."""
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT).mine(t10_db)
+    remap = {int(orig): dense for dense, orig in enumerate(res.item_map)}
+    out = []
+    for k in sorted({len(s) for s in res.itemsets}):
+        out.append(level_to_matrix(sorted(
+            tuple(remap[i] for i in s)
+            for s in res.itemsets if len(s) == k)))
+    return out
+
+
+def test_device_gen_matches_host_on_mined_levels(t10_db):
+    """jit-able join+prune == apriori_gen_matrix row-for-row (same lex
+    order, same dtype) on every level a real mine produces, plus edges."""
+    from repro.core.itemsets import apriori_gen_matrix
+    from repro.core.runtime import apriori_gen_device
+
+    levels = _mined_levels(t10_db)
+    assert levels, "fixture mined nothing"
+    cases = levels + [np.zeros((0, 2), np.int32), levels[0][:1]]
+    for lvl in cases:
+        want = apriori_gen_matrix(lvl)
+        got = apriori_gen_device(lvl)
+        assert got.dtype == np.int32 and got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+
+
+def test_device_filter_matches_host(t10_db):
+    """filter_candidates_device == filter_candidates_matrix (same rows, same
+    order) on speculative SPC waves, including keep-none and keep-all."""
+    from repro.core.itemsets import apriori_gen_matrix, \
+        filter_candidates_matrix
+    from repro.core.runtime import filter_candidates_device
+
+    for lvl in _mined_levels(t10_db):
+        cand = apriori_gen_matrix(lvl)
+        if not cand.size:
+            continue
+        spec = apriori_gen_matrix(cand)
+        for freq in [cand, cand[::2], cand[:0]]:
+            want = filter_candidates_matrix(spec, freq)
+            got = filter_candidates_device(spec, freq)
+            assert got.shape == want.shape
+            np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("trim", [False, True])
+def test_ladder_parity_all_stores(t10_db, oracle, store, trim):
+    """Fused ladder == host loop == brute force: itemsets AND supports, for
+    every array store, trim on and off."""
+    res = FrequentItemsetMiner(min_support=MIN_SUPPORT, store=store,
+                               device_loop=True, trim=trim).mine(t10_db)
+    assert res.itemsets == oracle
+
+
+@pytest.mark.parametrize("trim", [False, True])
+def test_ladder_parity_sharded_1d(deep_db, deep_oracle, trim):
+    runner = ShardedRunner(store="perfect_hash", mesh=_mesh())
+    res = FrequentItemsetMiner(min_support=0.08, runner=runner,
+                               device_loop=True, trim=trim).mine(deep_db)
+    assert res.itemsets == deep_oracle
+
+
+@needs_8_devices
+@pytest.mark.parametrize("store", ["packed_bitmap", "perfect_hash"])
+def test_ladder_parity_sharded_2x4(deep_db, deep_oracle, store):
+    """Fused + trimmed ladder on the full 2-D data x cand grid: the trim
+    re-compaction must stay bit-identical under candidate-axis sharding."""
+    runner = ShardedRunner(store=store, mesh=_mesh_2d(2, 4),
+                           cand_axes=("cand",))
+    res = FrequentItemsetMiner(min_support=0.08, runner=runner,
+                               device_loop=True, trim=True).mine(deep_db)
+    assert res.itemsets == deep_oracle
+
+
+def test_ladder_trim_shrinks_monotonically(deep_db, deep_oracle):
+    """Trimming must shrink: N_pad and F_pad non-increasing with k, with an
+    actual strict shrink somewhere (the DB is built to die off), while
+    results stay bit-identical to the untrimmed ladder and the oracle."""
+    mined = FrequentItemsetMiner(min_support=0.08, store="packed_bitmap",
+                                 device_loop=True, trim=True).mine(deep_db)
+    assert mined.itemsets == deep_oracle
+    pads = [(p.n_pad, p.f_pad) for p in mined.levels if p.n_pad]
+    assert len(pads) >= 3
+    assert all(a >= b for (a, _), (b, _) in zip(pads, pads[1:]))
+    assert all(a >= b for (_, a), (_, b) in zip(pads, pads[1:]))
+    assert pads[-1][0] < pads[0][0]  # transactions really died off
+    untrimmed = FrequentItemsetMiner(min_support=0.08, store="packed_bitmap",
+                                     device_loop=True, trim=False
+                                     ).mine(deep_db)
+    assert untrimmed.itemsets == mined.itemsets
+    upads = [(p.n_pad, p.f_pad) for p in untrimmed.levels if p.n_pad]
+    assert len(set(upads)) == 1  # untrimmed: dims never move
+
+
+def test_ladder_rejects_sim_runner():
+    from repro.core.runtime import ladder
+
+    with pytest.raises(ValueError, match="oracle"):
+        next(ladder(SimRunner(structure="trie"),
+                    np.zeros((2, 1), np.int32), 1, start_k=2, max_k=4))
+
+
+def test_miner_rejects_device_loop_with_combined_strategy():
+    with pytest.raises(ValueError, match="device_loop"):
+        FrequentItemsetMiner(strategy="fpc", device_loop=True)
+
+
+def test_ladder_mid_run_restore_parity(tmp_path, deep_db, deep_oracle):
+    """Crash-and-resume mid-ladder: delete the newest snapshots, resume from
+    an earlier level, and the resumed run must reproduce the uninterrupted
+    run bit-identically — itemsets, supports, AND the per-level trimmed
+    (n_pad, f_pad) dims of the re-run levels (the one-shot entry trim from
+    the restored level equals the cumulative trims it replaces)."""
+    import shutil
+
+    d = str(tmp_path)
+    full = FrequentItemsetMiner(min_support=0.08, store="perfect_hash",
+                                device_loop=True, trim=True,
+                                checkpoint_dir=d).mine(deep_db)
+    assert full.itemsets == deep_oracle
+    pads_full = {p.k: (p.n_pad, p.f_pad) for p in full.levels if p.n_pad}
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                   if n.startswith("step_") and "." not in n)
+    assert len(steps) >= 2
+    resume_step = steps[0]  # keep only the oldest surviving snapshot
+    for s in steps[1:]:
+        shutil.rmtree(os.path.join(d, f"step_{s:08d}"))
+    os.remove(os.path.join(d, "LATEST"))
+    m2 = FrequentItemsetMiner(min_support=0.08, store="perfect_hash",
+                              device_loop=True, trim=True, checkpoint_dir=d)
+    min_count = max(1, int(np.ceil(0.08 * len(deep_db))))
+    state = m2._try_restore(len(deep_db), min_count,
+                            m2._config(m2._make_runner()))
+    assert state is not None and state[3] == resume_step  # resumes mid-run
+    resumed = m2.mine(deep_db)
+    assert resumed.itemsets == full.itemsets  # itemsets AND supports
+    pads_resumed = {p.k: (p.n_pad, p.f_pad)
+                    for p in resumed.levels if p.n_pad}
+    for k in pads_resumed:  # re-run levels: identical trimmed dims
+        assert pads_resumed[k] == pads_full[k], k
+
+
+# -- encoded-dataset cache ---------------------------------------------------
+def test_dataset_cache_hit_across_runners(t10_db, oracle):
+    """Two runners over the same (DB, store, item_map) share one encode."""
+    from repro.core.runtime import DATASET_CACHE
+
+    DATASET_CACHE.clear()
+    r1 = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                              runner=JaxRunner(store="perfect_hash"))
+    assert r1.mine(t10_db).itemsets == oracle
+    assert DATASET_CACHE.stats()["misses"] == 1
+    r2 = FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                              runner=JaxRunner(store="perfect_hash"))
+    assert r2.mine(t10_db).itemsets == oracle
+    stats = DATASET_CACHE.stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    DATASET_CACHE.clear()
+
+
+def test_dataset_cache_key_sensitivity(t10_db):
+    """A different store, DB, or item_map must miss, never alias."""
+    from repro.core.runtime import DATASET_CACHE
+
+    DATASET_CACHE.clear()
+    FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                         store="perfect_hash").mine(t10_db)
+    FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                         store="sorted_prefix").mine(t10_db)  # new store
+    FrequentItemsetMiner(min_support=0.2,
+                         store="perfect_hash").mine(t10_db)  # new item_map
+    FrequentItemsetMiner(min_support=MIN_SUPPORT,
+                         store="perfect_hash").mine(t10_db[:200])  # new DB
+    assert DATASET_CACHE.stats()["misses"] == 4
+    DATASET_CACHE.clear()
+
+
+def test_dataset_cache_lru_eviction():
+    from repro.core.runtime import EncodedDatasetCache
+
+    cache = EncodedDatasetCache(max_entries=2)
+    assert cache.get_or_build("a", lambda: 1) == 1
+    assert cache.get_or_build("b", lambda: 2) == 2
+    assert cache.get_or_build("a", lambda: -1) == 1   # hit, refreshes a
+    assert cache.get_or_build("c", lambda: 3) == 3    # evicts b
+    assert cache.get_or_build("b", lambda: 9) == 9    # rebuilt: was evicted
+    assert cache.stats() == {"hits": 1, "misses": 4, "entries": 2}

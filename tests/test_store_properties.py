@@ -138,6 +138,38 @@ def test_candidate_shard_axes_cover_encode_outputs(store):
         assert out[name].shape[axis] == cand.shape[0]
 
 
+# -- fused-ladder layer -------------------------------------------------------
+# The same adversarial DBs through the device-resident level ladder
+# (gen -> encode -> count -> prune fused in one dispatch per level, with
+# on-device trimming): every store's fused path must reproduce brute force
+# exactly — supports included — like its per-wave path above.
+
+def _assert_ladder_parity(db, n_items, store, trim):
+    from repro.core import FrequentItemsetMiner, brute_force_frequent
+
+    min_support = 0.2
+    res = FrequentItemsetMiner(min_support=min_support, store=store,
+                               device_loop=True, trim=trim).mine(db)
+    want = brute_force_frequent(
+        db, max(1, int(np.ceil(min_support * len(db)))))
+    assert res.itemsets == want
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("trim", [False, True])
+@pytest.mark.parametrize("seed", [0, 2])
+def test_ladder_parity_fixed_seeds(store, trim, seed):
+    n_items, db = _random_db(seed)
+    _assert_ladder_parity(db, n_items, store, trim)
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("case", range(len(EDGE_DBS)))
+def test_ladder_parity_edge_dbs(store, case):
+    n_items, db = EDGE_DBS[case]
+    _assert_ladder_parity(db, n_items, store, trim=True)
+
+
 # -- hypothesis layer --------------------------------------------------------
 if HAVE_HYPOTHESIS:
 
