@@ -169,6 +169,7 @@ def main() -> None:
         bench_min_support,
         bench_paper,
         bench_runtime,
+        bench_serve,
         bench_stores_jax,
         bench_strategies,
     )
@@ -187,6 +188,9 @@ def main() -> None:
         # BENCH_paper.json parity certificate is written only by the
         # dedicated `benchmarks/bench_paper.py [--quick]` CLI.
         "paper_smoke": bench_paper.run,
+        # Streaming service: delta-update ingest vs full-window recount —
+        # the serving layer's throughput/latency certificate.
+        "serve": bench_serve.run,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -132,6 +132,33 @@ print("elastic smoke OK: lost 4/8 devices at k=3, resumed on",
       dict(zip(mesh.axis_names, mesh.devices.shape)), "- counts bit-identical")
 PY
 
+echo "== smoke: streaming mining service (ingest/evict -> query parity) =="
+python - <<'PY'
+import numpy as np
+from repro.core import FrequentItemsetMiner
+from repro.data import basket_stream
+from repro.serve import MiningService
+
+svc = MiningService(min_support=0.05, store="perfect_hash", n_slots=6,
+                    slot_size=48, staleness=0.5, max_k=6)
+delta_served = 0
+stream = basket_stream("T10I4D100K", batch_size=48, scale=0.005, seed=11,
+                       repeat=True, max_batches=10)
+for ab in stream:
+    svc.ingest(ab.transactions)
+    res = svc.query()
+    oracle = FrequentItemsetMiner(min_support=0.05, store="perfect_hash",
+                                  max_k=6).mine(svc.window())
+    assert res.itemsets == oracle.itemsets, (
+        f"mid-stream query diverged from batch mine at batch {ab.seq}")
+    delta_served += 0 if res.refreshed else 1
+st = svc.stats()
+svc.close()
+print(f"serving smoke OK: 10 ingest/query rounds bit-identical to batch "
+      f"miner ({delta_served} delta-served, {st['refreshes']} refreshes, "
+      f"{st['delta_jobs']} delta jobs, window {st['window']})")
+PY
+
 echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
 

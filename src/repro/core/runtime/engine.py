@@ -441,6 +441,57 @@ class MapReduceEngine:
         """Blocking wrapper: (C, k) candidate matrix -> int64[C] counts."""
         return self.count_candidates_async(cand).result()
 
+    # -- resident-session block counting (the serving delta path) ------------
+    def count_block_async(self, enc_block: EncodedDB,
+                          cand: np.ndarray) -> PendingCounts:
+        """Count ``cand`` over an *ad-hoc* encoded transaction block instead
+        of the placed DB — the streaming service's delta-update primitive.
+
+        The block's store tensors ride the dispatch as inputs (nothing is
+        re-placed, so the resident window DB and its jits are untouched) and
+        results flow through the same double-buffered FIFO as the wave
+        pipeline: a query-time ladder refresh and the ingest deltas of the
+        next batch interleave on one queue instead of serializing.  Blocks
+        are small (one window slot), so counting runs un-sharded on the
+        default device — integer adds are order-exact, so delta counts are
+        bit-identical under any mesh.
+        """
+        cand = np.ascontiguousarray(np.asarray(cand, dtype=np.int32))
+        if cand.size == 0:
+            return PendingCounts(self, 0)
+        if enc_block.n_transactions == 0:
+            pending = PendingCounts(self, 1)
+            pending._parts[0] = np.zeros((cand.shape[0],), np.int64)
+            return pending
+        trans = {k: jnp.asarray(v)
+                 for k, v in self.store.transaction_inputs(enc_block).items()}
+        use_kernel = bool(getattr(self.store, "use_kernel", False))
+        ekey = ("block_encode", enc_block.f_pad, use_kernel)
+        encode = self._place_jit_cache.get(ekey)
+        if encode is None:
+            encode = jax.jit(functools.partial(
+                self.store.encode_candidates, f_pad=enc_block.f_pad))
+            self._place_jit_cache[ekey] = encode
+        ckey = ("block_count", tuple(sorted(trans)), use_kernel)
+        count = self._place_jit_cache.get(ckey)
+        if count is None:
+            count = jax.jit(self._blocked_count)
+            self._place_jit_cache[ckey] = count
+        starts = range(0, cand.shape[0], self.cand_block)
+        pending = PendingCounts(self, len(starts))
+        for slot, i in enumerate(starts):
+            chunk = cand[i : i + self.cand_block]
+            cand_p = pad_candidates(chunk, enc_block.f_pad)
+            dev = count(trans, encode(jnp.asarray(cand_p, dtype=jnp.int32)))
+            self._queue.append((pending, slot, dev, chunk.shape[0]))
+            while len(self._queue) > self.inflight:
+                self._force_oldest()
+        return pending
+
+    def count_block(self, enc_block: EncodedDB, cand: np.ndarray) -> np.ndarray:
+        """Blocking wrapper around :meth:`count_block_async`."""
+        return self.count_block_async(enc_block, cand).result()
+
     # -- the device-resident level ladder ------------------------------------
     def level_ladder(self, min_count: int, trim: bool = True,
                      fault_plan=None):

@@ -70,7 +70,7 @@ from repro.core.runtime.faults import (
 from repro.core.runtime.job import CountJob, JobProfile
 from repro.core.sequential import SEQUENTIAL_STORES
 from repro.core.stores import encode_db_from_padded, padded_from_transactions
-from repro.core.stores.base import ITEM_PAD
+from repro.core.stores.base import EncodedDB, dense_remap_padded
 
 
 def _chunks(transactions: Sequence[Sequence[int]], n_mappers: int):
@@ -253,6 +253,16 @@ class BaseRunner:
 
     def count(self, job: CountJob) -> Tuple[np.ndarray, JobProfile]:
         return self.count_async(job).result()
+
+    def count_block_async(self, enc_block, cand: np.ndarray):
+        """Resident-session mode (serving): count ``cand`` over an ad-hoc
+        encoded transaction block instead of the placed DB.  Engine-backed
+        runners implement it; the cost-model backend has no resident device
+        state to delta-update against."""
+        raise NotImplementedError(
+            f"{self.kind} runner has no resident-session mode; the streaming "
+            "MiningService needs an engine-backed runner (jax or sharded)"
+        )
 
     def filter_candidates(self, cand: np.ndarray,
                           level_mat: np.ndarray) -> np.ndarray:
@@ -704,22 +714,27 @@ class JaxRunner(BaseRunner):
 
     def _encode(self, item_map: np.ndarray):
         """Vectorized dense re-encode over the frequent items (Apriori
-        property: no candidate may contain an infrequent item)."""
-        padded, n_raw = self._padded_raw, self._n_raw
-        f = len(item_map)
-        lookup = np.full((n_raw + 1,), ITEM_PAD, np.int32)
-        if f:
-            lookup[np.asarray(item_map, np.int64)] = np.arange(f, dtype=np.int32)
-        dense = lookup[np.minimum(padded, n_raw)]  # infrequent/pad -> ITEM_PAD
-        dense = np.sort(dense, axis=1)  # unique-sorted; ITEM_PAD collects at end
-        width = int((dense < ITEM_PAD).sum(axis=1).max()) if dense.size else 0
-        # Clamp to a lane-friendly minimum, but never past the actual column
-        # count — max(8, width) alone promises 8 columns the slice below
-        # cannot deliver when the matrix is narrower (all-infrequent or
-        # single-item DBs), leaving downstream shapes out of sync.
-        width = min(dense.shape[1], max(8, width))
-        dense = np.ascontiguousarray(dense[:, :width])
-        return encode_db_from_padded(dense, n_items=f)
+        property: no candidate may contain an infrequent item).  The remap
+        itself is shared with the serving layer's per-block encode
+        (``dense_remap_padded``), so batch and streaming blocks agree."""
+        dense = dense_remap_padded(self._padded_raw, item_map,
+                                   n_raw=self._n_raw)
+        return encode_db_from_padded(dense, n_items=len(item_map))
+
+    def encode_block(self, padded_raw: np.ndarray,
+                     item_map: np.ndarray) -> "EncodedDB":
+        """Resident-session helper: dense-encode an ad-hoc transaction block
+        (raw ids) over a given frequent-item map — the delta path's encode.
+        Shares the remap and the f_pad formula with ``place()``, so block
+        candidate tensors line up with the tracked window's."""
+        dense = dense_remap_padded(padded_raw, item_map)
+        return encode_db_from_padded(dense, n_items=len(item_map))
+
+    def count_block_async(self, enc_block, cand: np.ndarray):
+        """Count a candidate matrix over an *ad-hoc* encoded block instead of
+        the placed DB — the serving layer's delta-update primitive, dispatched
+        through the engine's shared FIFO so delta waves overlap ingest."""
+        return self.engine.count_block_async(enc_block, cand)
 
     def filter_candidates(self, cand: np.ndarray,
                           level_mat: np.ndarray) -> np.ndarray:

@@ -21,7 +21,8 @@ the only per-wave host-to-device transfer.
 """
 
 from repro.core.stores.base import (
-    EncodedDB, encode_db, encode_db_from_padded, pack_bitmap, pad_candidates,
+    DeltaCountMixin, EncodedDB, dense_remap_padded, encode_db,
+    encode_db_from_padded, pack_bitmap, pad_candidates,
     padded_from_transactions, ITEM_PAD, WORD_BITS,
 )
 from repro.core.stores.perfect_hash import PerfectHashStore
@@ -39,7 +40,9 @@ ARRAY_STORES = {
 }
 
 __all__ = [
+    "DeltaCountMixin",
     "EncodedDB",
+    "dense_remap_padded",
     "encode_db",
     "encode_db_from_padded",
     "padded_from_transactions",

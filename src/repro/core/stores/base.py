@@ -126,6 +126,62 @@ def encode_db(
     return encode_db_from_padded(padded, n_items=n_items, align=align)
 
 
+def dense_remap_padded(padded: np.ndarray, item_map: np.ndarray,
+                       n_raw: int = None, min_width: int = 8) -> np.ndarray:
+    """Remap an (N, L) raw-id padded matrix onto the dense ids of
+    ``item_map`` (sorted original ids -> [0, F)); items outside the map —
+    infrequent items, pads — become ITEM_PAD and collect at the row ends.
+
+    This is the dense re-encode both the batch path (``JaxRunner._encode``)
+    and the serving layer's per-slot delta blocks go through: the remap is
+    the "perfect hash" of the paper's hash-table trie, and dropping unmapped
+    items is exact (no candidate may contain an infrequent item).  The
+    returned width is clamped to a lane-friendly minimum but never past the
+    source's column count.
+    """
+    item_map = np.asarray(item_map, np.int64)
+    f = len(item_map)
+    if n_raw is None:
+        top = int(item_map[-1]) + 1 if f else 0
+        real = padded[padded < ITEM_PAD]
+        n_raw = max(top, int(real.max()) + 1 if real.size else 0)
+    lookup = np.full((n_raw + 1,), ITEM_PAD, np.int32)
+    if f:
+        lookup[item_map] = np.arange(f, dtype=np.int32)
+    dense = lookup[np.minimum(padded, n_raw)]  # unmapped/pad -> ITEM_PAD
+    dense = np.sort(dense, axis=1)  # unique-sorted; ITEM_PAD collects at end
+    width = int((dense < ITEM_PAD).sum(axis=1).max()) if dense.size else 0
+    width = min(dense.shape[1], max(min_width, width))
+    return np.ascontiguousarray(dense[:, :max(1, width)])
+
+
+class DeltaCountMixin:
+    """Incremental counting over transaction *blocks* — the serving path.
+
+    Support counts are additive over disjoint transaction sets, so a sliding
+    window's counts are maintained exactly by adding the contribution of an
+    ingested block and subtracting the contribution of an evicted block:
+    ``count(window') = count(window) + count(added) - count(removed)``.
+    Both directions reuse the store's own ``count_block`` (same gathers,
+    same integer adds), so delta-maintained counts are bit-identical to a
+    full recount at every step.
+    """
+
+    @classmethod
+    def count_delta(cls, counts, trans_block: dict, cands: dict):
+        """counts + the block's contribution (jit-safe, pure)."""
+        import jax.numpy as jnp
+
+        return counts + cls.count_block(trans_block, cands).astype(jnp.int64)
+
+    @classmethod
+    def uncount_delta(cls, counts, trans_block: dict, cands: dict):
+        """counts - the block's contribution (exact inverse of count_delta)."""
+        import jax.numpy as jnp
+
+        return counts - cls.count_block(trans_block, cands).astype(jnp.int64)
+
+
 def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128,
                    shards: int = 1) -> np.ndarray:
     """Pad the candidate count C up to ``align``; pad rows point at the

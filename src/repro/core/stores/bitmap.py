@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.stores.base import EncodedDB
+from repro.core.stores.base import DeltaCountMixin, EncodedDB
 
 
 def candidates_to_khot(cand: np.ndarray, f_pad: int) -> tuple[np.ndarray, np.ndarray]:
@@ -33,7 +33,7 @@ def candidates_to_khot(cand: np.ndarray, f_pad: int) -> tuple[np.ndarray, np.nda
     return khot, kvec
 
 
-class BitmapMXUStore:
+class BitmapMXUStore(DeltaCountMixin):
     name = "bitmap"
     use_kernel = False  # flipped by engine/benchmarks to run the Pallas kernel
 

@@ -14,10 +14,10 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.stores.base import EncodedDB, ITEM_PAD
+from repro.core.stores.base import DeltaCountMixin, EncodedDB, ITEM_PAD
 
 
-class HashBucketStore:
+class HashBucketStore(DeltaCountMixin):
     name = "hash_bucket"
     child_max_size = 20  # paper §5.2
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.stores.base import EncodedDB, WORD_BITS
+from repro.core.stores.base import DeltaCountMixin, EncodedDB, WORD_BITS
 
 
 def pack_candidates_device(cand: jnp.ndarray, n_words: int) -> jnp.ndarray:
@@ -39,7 +39,7 @@ def pack_candidates_device(cand: jnp.ndarray, n_words: int) -> jnp.ndarray:
     return packed
 
 
-class PackedBitmapStore:
+class PackedBitmapStore(DeltaCountMixin):
     name = "packed_bitmap"
     use_kernel = False  # flipped by engine/benchmarks to run the Pallas kernel
 

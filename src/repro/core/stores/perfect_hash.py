@@ -12,10 +12,10 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.stores.base import EncodedDB
+from repro.core.stores.base import DeltaCountMixin, EncodedDB
 
 
-class PerfectHashStore:
+class PerfectHashStore(DeltaCountMixin):
     name = "perfect_hash"
 
     @staticmethod

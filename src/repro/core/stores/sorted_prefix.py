@@ -12,10 +12,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.stores.base import EncodedDB
+from repro.core.stores.base import DeltaCountMixin, EncodedDB
 
 
-class SortedPrefixStore:
+class SortedPrefixStore(DeltaCountMixin):
     name = "sorted_prefix"
 
     @staticmethod

@@ -1,0 +1,77 @@
+"""Seeded basket streams: replay registry datasets as timestamped arrivals.
+
+The serving layer consumes transactions as *arrival batches* — a burst of
+baskets posted within one tick of a Poisson-ish arrival process — rather
+than a monolithic DB.  ``basket_stream`` replays any registered dataset
+(``repro.data.datasets``) as such a stream: the dataset rows become the
+arrival order (optionally shuffled), batch sizes are drawn around a target
+rate, and each batch carries a monotonically increasing timestamp.  Seeded
+end to end, so a stream is exactly reproducible — the property the
+serving parity tests and ``BENCH_serve`` both lean on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.datasets import get_dataset
+
+
+@dataclasses.dataclass
+class ArrivalBatch:
+    """One tick of the stream: the baskets that arrived by ``t_arrival``."""
+
+    transactions: List[List[int]]
+    t_arrival: float               # seconds since stream start (synthetic)
+    seq: int                       # batch index, 0-based
+
+    def __len__(self) -> int:
+        return len(self.transactions)
+
+
+def basket_stream(
+    dataset: str = "T10I4D100K",
+    batch_size: int = 256,
+    scale: float = 1.0,
+    seed: int = 0,
+    shuffle: bool = True,
+    jitter: float = 0.25,
+    rate: float = 10_000.0,
+    repeat: bool = False,
+    max_batches: Optional[int] = None,
+) -> Iterator[ArrivalBatch]:
+    """Replay ``dataset`` as a seeded stream of timestamped arrival batches.
+
+    ``batch_size`` is the mean arrivals per tick; actual sizes jitter
+    uniformly within ``±jitter`` of it (clipped to >= 1) — serving code must
+    not assume fixed-size batches.  ``rate`` (baskets/sec) sets the synthetic
+    arrival clock: ``t_arrival`` advances by ``len(batch) / rate`` per tick.
+    ``repeat`` loops the dataset forever (reshuffled per epoch when
+    ``shuffle``) for sustained-throughput benchmarks; cap with
+    ``max_batches``.
+    """
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    base = get_dataset(dataset, scale=scale, seed=seed)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5EED]))
+    lo = max(1, int(round(batch_size * (1.0 - jitter))))
+    hi = max(lo, int(round(batch_size * (1.0 + jitter))))
+    t = 0.0
+    seq = 0
+    while True:
+        order = rng.permutation(len(base)) if shuffle else np.arange(len(base))
+        i = 0
+        while i < len(base):
+            n = int(rng.integers(lo, hi + 1))
+            block = [list(base[j]) for j in order[i : i + n]]
+            i += len(block)
+            t += len(block) / rate
+            yield ArrivalBatch(transactions=block, t_arrival=t, seq=seq)
+            seq += 1
+            if max_batches is not None and seq >= max_batches:
+                return
+        if not repeat:
+            return

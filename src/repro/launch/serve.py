@@ -1,31 +1,50 @@
-"""Serving launcher: batched generation with the ServeEngine.
+"""Mining-service launcher: stream a dataset through the ``MiningService``.
 
-  python -m repro.launch.serve --arch qwen2-1.5b --batch 8 --new-tokens 32
+  python -m repro.launch.serve --dataset T10I4D100K --support 0.01 \\
+      --scale 0.02 --batches 20 --query-every 4
+
+Replays the dataset as a seeded basket stream (``repro.data.stream``),
+ingests each arrival batch into the slot-based sliding window, and serves
+frequent-itemset queries every ``--query-every`` batches, reporting ingest
+throughput, query latency, and how many queries were served from the
+delta-maintained state without a refresh.
+
+The legacy LM path (batched generation with the ``ServeEngine``) is kept
+behind ``--lm`` and, like ``examples/train_lm.py``, gated on ``REPRO_LM=1``
+— the repository's serving surface is the mining service.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
-import jax
-
-from repro.configs import get_config, get_reduced
-from repro.models import model as M
-from repro.models.params import materialize
-from repro.serve import ServeEngine
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def _lm_main(argv) -> None:
+    if os.environ.get("REPRO_LM") != "1":
+        print("the LM serving path is out of scope for the mining repro; "
+              "set REPRO_LM=1 to run it anyway")
+        sys.exit(0)
+
+    import jax
+
+    from repro.configs import get_config, get_reduced
+    from repro.models import model as M
+    from repro.models.params import materialize
+    from repro.serve import ServeEngine
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve --lm")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     on_tpu = jax.default_backend() == "tpu"
     cfg = get_config(args.arch) if on_tpu else get_reduced(args.arch)
@@ -41,7 +60,8 @@ def main() -> None:
     if cfg.frontend == "vision_patches":
         import jax.numpy as jnp
 
-        vis = jnp.zeros((args.batch, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16)
+        vis = jnp.zeros((args.batch, cfg.n_vis_tokens, cfg.d_model),
+                        jnp.bfloat16)
 
     t0 = time.time()
     out = engine.generate(prompts, max_new_tokens=args.new_tokens,
@@ -50,6 +70,82 @@ def main() -> None:
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * out.shape[1] / dt:.1f} tok/s)")
     print("first row:", out[0, :16].tolist())
+
+
+def main() -> None:
+    if "--lm" in sys.argv[1:]:
+        argv = [a for a in sys.argv[1:] if a != "--lm"]
+        _lm_main(argv)
+        return
+
+    from repro.data.stream import basket_stream
+    from repro.serve import MiningService
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
+    ap.add_argument("--dataset", default="T10I4D100K")
+    ap.add_argument("--support", type=float, default=0.01)
+    ap.add_argument("--store", default="perfect_hash")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sharded backend on the default device mesh")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--query-every", type=int, default=4)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--slot-size", type=int, default=256)
+    ap.add_argument("--staleness", type=float, default=0.5)
+    ap.add_argument("--max-k", type=int, default=8)
+    ap.add_argument("--device-loop", action="store_true",
+                    help="refresh through the fused LevelLadder")
+    ap.add_argument("--no-trim", action="store_true")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh()
+
+    svc = MiningService(
+        min_support=args.support, store=None if mesh else args.store,
+        mesh=mesh, n_slots=args.n_slots, slot_size=args.slot_size,
+        staleness=args.staleness, max_k=args.max_k,
+        device_loop=args.device_loop, trim=not args.no_trim)
+    print(f"mining service: {svc.runner.describe()} | "
+          f"window {args.n_slots}x{args.slot_size} | "
+          f"support {args.support} | staleness {args.staleness}")
+
+    ingest_s = 0.0
+    ingested = 0
+    q_lat = []
+    delta_served = 0
+    n_queries = 0
+    stream = basket_stream(args.dataset, batch_size=args.batch_size,
+                           scale=args.scale, seed=args.seed, repeat=True,
+                           max_batches=args.batches)
+    for ab in stream:
+        rep = svc.ingest(ab.transactions)
+        ingest_s += rep.seconds
+        ingested += rep.n_ingested
+        if (ab.seq + 1) % args.query_every == 0:
+            res = svc.query()
+            n_queries += 1
+            q_lat.append(res.seconds)
+            delta_served += 0 if res.refreshed else 1
+            mode = res.stale_reason if res.refreshed else "delta"
+            print(f"  batch {ab.seq + 1:4d} | window {res.n_transactions:6d}"
+                  f" | {len(res.itemsets):5d} frequent | {mode:9s}"
+                  f" | {res.seconds * 1e3:8.1f} ms")
+    st = svc.stats()
+    svc.close()
+    lat = np.array(q_lat) if q_lat else np.zeros((1,))
+    print(f"ingested {ingested} baskets in {ingest_s:.2f}s "
+          f"({ingested / max(ingest_s, 1e-9):,.0f} txn/s); "
+          f"{delta_served}/{n_queries} queries delta-served; "
+          f"query p50 {np.percentile(lat, 50) * 1e3:.1f} ms "
+          f"p95 {np.percentile(lat, 95) * 1e3:.1f} ms; "
+          f"{st['refreshes']} refreshes, {st['delta_jobs']} delta jobs")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,20 @@
-from repro.serve.engine import ServeEngine
+"""Serving layer: the streaming frequent-itemset ``MiningService``.
 
-__all__ = ["ServeEngine"]
+``MiningService`` (``repro.serve.engine``) is the first-class surface:
+an incremental, slot-based frequent-itemset server over a sliding window
+of transactions.  The legacy LM ``ServeEngine`` lives on in
+``repro.serve.lm`` and is imported lazily so the mining path never pulls
+in the model stack.
+"""
+
+from repro.serve.engine import IngestReport, MiningService, ServeResult
+
+__all__ = ["MiningService", "ServeResult", "IngestReport", "ServeEngine"]
+
+
+def __getattr__(name):
+    if name == "ServeEngine":
+        from repro.serve.lm import ServeEngine
+
+        return ServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

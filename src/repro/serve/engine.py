@@ -1,85 +1,466 @@
-"""Batched serving engine: prefill + greedy/temperature decode over KV caches.
+"""Streaming frequent-itemset mining service over a sliding window.
 
-jit-compiled prefill and decode steps (donated caches), batched requests,
-per-sequence stop handling. On a mesh the cache is sharded by the same rules
-as training activations.
+``MiningService`` is the serving-layer counterpart of the batch
+``FrequentItemsetMiner``: transactions arrive in batches (millions of users
+posting baskets), live in fixed-size *slots* forming a sliding window —
+continuous batching, the decode-slot idiom — and frequent-itemset queries
+are served from a continuously maintained count state instead of re-mining
+the window per request.
+
+Exactness by additivity.  Support counts are additive over disjoint
+transaction sets, so the service maintains, between full refreshes:
+
+* the exact per-item histogram over the raw item universe (bincount deltas
+  on ingest/evict) — L1 at any threshold falls out directly; and
+* the full candidate lattice of the last refresh — every candidate matrix
+  the level loop counted, frequent or not (the *negative border* included),
+  with counts delta-updated per ingested/evicted slot through the stores'
+  ``count_delta``/``uncount_delta`` path (add the new block's contribution,
+  subtract the evicted block's — bit-identical to a recount).
+
+A query walks the Apriori lattice from those tracked counts: L1 from the
+histogram, ``C_k = apriori_gen(L_{k-1})`` per level, counts looked up in the
+tracked lattice.  If every generated candidate is tracked, the answer is
+*provably* the batch miner's answer over the exact current window — same
+candidate generation, same exact counts, same thresholding.  If any
+candidate escapes the tracked set (an itemset crossed the threshold since
+the refresh and generated new children), the walk declares the state stale
+and triggers a refresh: a full re-mine of the current window through the
+resident runner — the SPC wave pipeline, or ``device_loop.LevelLadder``
+(fused, optionally trimmed) plus one negative-border counting pass.  A
+``staleness`` knob additionally forces a refresh once the fraction of the
+window replaced since the last refresh exceeds the threshold, bounding how
+much delta work a single query may lean on.  The ``margin`` knob mines the
+refresh lattice at ``ceil(margin * min_count)`` — a slack band below the
+serving threshold — so support-boundary flicker as the window slides stays
+inside the tracked lattice instead of forcing a refresh per query; the
+served result is always filtered at the true threshold, so the margin
+never changes answers, only the refresh rate.
+
+Delta dispatch is async: ingest encodes each slot block over the tracked
+item map and pushes per-level delta counting jobs through the engine's
+double-buffered FIFO (``count_block_async``), so device delta counting
+overlaps the host's next-batch ingest; the counts are only joined when a
+query actually needs them.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.distributed.ctx import use_sharding
-from repro.models import model as M
-from repro.models.params import materialize
+from repro.core.itemsets import Itemset, apriori_gen_matrix, level_to_matrix
+from repro.core.runtime import BaseRunner, CountJob, make_runner
+from repro.core.stores.base import ITEM_PAD, padded_from_transactions
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 1024,
-                 mesh=None, rules=None):
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self.mesh, self.rules = mesh, rules
+@dataclasses.dataclass
+class ServeResult:
+    """One served query: the exact frequent itemsets of the current window."""
 
-        def _wrap(fn):
-            if mesh is None:
-                return fn
+    itemsets: Dict[Itemset, int]   # frequent itemset -> support count
+    min_count: int
+    n_transactions: int            # window size the query was served over
+    refreshed: bool                # True if this query triggered a full refresh
+    stale_reason: Optional[str]    # "cold" | "drift" | "untracked" | None
+    seconds: float = 0.0
 
-            def inner(*a, **kw):
-                with use_sharding(mesh, rules):
-                    return fn(*a, **kw)
+    def frequent_at(self, k: int) -> Dict[Itemset, int]:
+        return {s: c for s, c in self.itemsets.items() if len(s) == k}
 
-            return inner
 
-        self._prefill = jax.jit(_wrap(
-            lambda p, b, c: M.prefill(p, b, cfg, c)), donate_argnums=(2,))
-        self._decode = jax.jit(_wrap(
-            lambda p, t, c, n: M.decode_step(p, t, c, n, cfg)),
-            donate_argnums=(2,))
+@dataclasses.dataclass
+class IngestReport:
+    """One ingest call: slots filled/evicted and the async delta dispatches."""
 
-    def generate(
+    n_ingested: int
+    n_evicted: int
+    n_slots: int                   # live slots after the call
+    window: int                    # window size after the call
+    delta_jobs: int                # per-level delta counts dispatched (async)
+    seconds: float
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One fixed-size window slot: the raw baskets plus their padded matrix
+    (kept so eviction can uncount the exact block it once counted)."""
+
+    transactions: List[List[int]]
+    padded: np.ndarray             # (n, L) int32 raw ids, ITEM_PAD-padded
+    seq: int
+
+
+class _TrackedLevel:
+    """One tracked candidate level: the (C, k) dense-id matrix counted at the
+    last refresh and its delta-maintained exact counts."""
+
+    __slots__ = ("cand", "counts", "_index")
+
+    def __init__(self, cand: np.ndarray, counts: np.ndarray) -> None:
+        self.cand = np.ascontiguousarray(cand, dtype=np.int32)
+        self.counts = np.asarray(counts, dtype=np.int64).copy()
+        self._index: Optional[Dict[bytes, int]] = None
+
+    def rows_of(self, queries: np.ndarray) -> np.ndarray:
+        """int64[Q] row index per query row; -1 where untracked."""
+        if self._index is None:
+            self._index = {row.tobytes(): i for i, row in enumerate(self.cand)}
+        q = np.ascontiguousarray(queries, dtype=np.int32)
+        return np.fromiter(
+            (self._index.get(row.tobytes(), -1) for row in q),
+            dtype=np.int64, count=q.shape[0])
+
+
+class MiningService:
+    """Incremental frequent-itemset server over a slot-based sliding window.
+
+    ``ingest(batch)`` appends baskets to fixed-size slots (evicting the
+    oldest slots once ``n_slots`` is reached) and dispatches async delta
+    counting; ``query()`` returns the frequent itemsets of the exact current
+    window — bit-identical, itemsets AND supports, to a fresh batch
+    ``FrequentItemsetMiner`` run over ``window()``.
+
+    Requires an engine-backed runner (Jax or Sharded): the resident window
+    DB, the delta path, and the ladder refresh all live on the engine.
+    """
+
+    def __init__(
         self,
-        prompts: np.ndarray,          # (B, S_prompt) int32
-        max_new_tokens: int = 32,
-        temperature: float = 0.0,
-        stop_token: Optional[int] = None,
-        rng: Optional[jax.Array] = None,
-        vis_embeds=None,
-    ) -> np.ndarray:
-        b, s_prompt = prompts.shape
-        assert s_prompt + max_new_tokens <= self.max_len
-        cache = materialize(
-            jax.random.PRNGKey(0), M.abstract_cache(self.cfg, b, self.max_len))
-        batch = {"tokens": jnp.asarray(prompts)}
-        if vis_embeds is not None:
-            batch["vis_embeds"] = vis_embeds
-        logits, cache = self._prefill(self.params, batch, cache)
+        min_support: float = 0.01,
+        store: Optional[str] = None,
+        n_slots: int = 8,
+        slot_size: int = 256,
+        mesh=None,
+        runner: Optional[BaseRunner] = None,
+        staleness: float = 0.5,
+        margin: float = 0.8,
+        max_k: int = 16,
+        device_loop: bool = False,
+        trim: bool = True,
+    ) -> None:
+        if runner is not None and (store is not None or mesh is not None):
+            raise ValueError(
+                "pass backend config either through runner= or through "
+                "store/mesh — not both")
+        if n_slots < 1 or slot_size < 1:
+            raise ValueError("n_slots and slot_size must be >= 1")
+        self.min_support = float(min_support)
+        self.n_slots = int(n_slots)
+        self.slot_size = int(slot_size)
+        self.staleness = float(staleness)
+        if not 0.0 < margin <= 1.0:
+            raise ValueError("margin must be in (0, 1]")
+        self.margin = float(margin)
+        self.max_k = int(max_k)
+        self.device_loop = bool(device_loop)
+        self.trim = bool(trim)
+        self.runner = runner if runner is not None else make_runner(
+            store=store if store is not None else "perfect_hash", mesh=mesh)
+        if not hasattr(self.runner, "engine"):
+            raise ValueError(
+                f"MiningService needs an engine-backed runner, got "
+                f"{self.runner.describe()} — the sim cost model has no "
+                "resident device state to delta-update")
+        # -- window state --------------------------------------------------
+        self._slots: Deque[_Slot] = collections.deque()
+        self._seq = 0
+        self._window_n = 0
+        # -- exact incremental state ---------------------------------------
+        self._hist = np.zeros((0,), np.int64)   # raw-id item histogram
+        self._item_map = np.zeros((0,), np.int64)
+        self._lookup = np.full((1,), -1, np.int64)  # raw -> dense (or -1)
+        self._levels: Dict[int, _TrackedLevel] = {}
+        self._refreshed_once = False
+        self._churn = 0         # txns added+evicted since the last refresh
+        self._pending_deltas: List[Tuple[int, int, object]] = []
+        # -- telemetry -----------------------------------------------------
+        self.refreshes = 0
+        self.delta_jobs = 0
+        self.total_ingested = 0
+        self.total_evicted = 0
 
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
-        out = []
-        done = np.zeros((b,), bool)
-        tok = self._sample(logits, temperature, rng)
-        for i in range(max_new_tokens):
-            out.append(np.asarray(tok))
-            if stop_token is not None:
-                done |= np.asarray(tok)[:, 0] == stop_token
-                if done.all():
-                    break
-            logits, cache = self._decode(
-                self.params, tok, cache, jnp.int32(s_prompt + i + 1))
-            rng, sub = jax.random.split(rng)
-            tok = self._sample(logits, temperature, sub)
-        return np.concatenate(out, axis=1)
+    # -- window ------------------------------------------------------------
+    @property
+    def window_size(self) -> int:
+        return self._window_n
 
-    @staticmethod
-    def _sample(logits, temperature, rng):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            rng, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
+    def window(self) -> List[List[int]]:
+        """The exact current window contents, oldest slot first — the input
+        a parity-checking batch mine must run over."""
+        return [t for slot in self._slots for t in slot.transactions]
+
+    def close(self) -> None:
+        self.runner.close()
+
+    def __enter__(self) -> "MiningService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # -- ingest / evict ------------------------------------------------------
+    def ingest(self, transactions: Sequence[Sequence[int]]) -> IngestReport:
+        """Append a batch of baskets; evict expired slots; dispatch deltas.
+
+        The batch is cut into ``slot_size`` blocks, each becoming one slot.
+        When the ring is full the oldest slot is evicted first — its counts
+        are *subtracted* (uncount) exactly as the new block's are added, so
+        tracked counts always equal a fresh count over the live window.
+        """
+        t0 = time.perf_counter()
+        batch = [list(t) for t in transactions]
+        added = evicted = 0
+        jobs0 = self.delta_jobs
+        for i in range(0, len(batch), self.slot_size):
+            block = batch[i : i + self.slot_size]
+            if len(self._slots) == self.n_slots:
+                old = self._slots.popleft()
+                self._apply_block(old, sign=-1)
+                evicted += len(old.transactions)
+                self._window_n -= len(old.transactions)
+            padded, _ = padded_from_transactions(block)
+            slot = _Slot(transactions=block, padded=padded, seq=self._seq)
+            self._seq += 1
+            self._slots.append(slot)
+            self._apply_block(slot, sign=+1)
+            self._window_n += len(block)
+            added += len(block)
+        self.total_ingested += added
+        self.total_evicted += evicted
+        return IngestReport(
+            n_ingested=added, n_evicted=evicted, n_slots=len(self._slots),
+            window=self._window_n, delta_jobs=self.delta_jobs - jobs0,
+            seconds=time.perf_counter() - t0)
+
+    def _apply_block(self, slot: _Slot, sign: int) -> None:
+        """Fold one slot into (sign=+1) or out of (sign=-1) the incremental
+        state: exact histogram deltas on host, per-level candidate deltas
+        dispatched async on device."""
+        real = slot.padded[slot.padded < ITEM_PAD]
+        if real.size:
+            top = int(real.max()) + 1
+            if top > len(self._hist):
+                self._hist = np.concatenate(
+                    [self._hist, np.zeros((top - len(self._hist),), np.int64)])
+            # Rows are unique-sorted, so a flat bincount is presence counting.
+            self._hist += sign * np.bincount(real, minlength=len(self._hist)
+                                             ).astype(np.int64)
+        self._churn += len(slot.transactions)
+        if not self._levels:
+            return
+        enc = self.runner.encode_block(slot.padded, self._item_map)
+        for k, tl in self._levels.items():
+            if tl.cand.size:
+                pend = self.runner.count_block_async(enc, tl.cand)
+                self._pending_deltas.append((sign, k, pend))
+                self.delta_jobs += 1
+
+    def _drain_deltas(self) -> None:
+        """Join all outstanding delta jobs into the tracked counts (exact:
+        counts += count(added block) - count(evicted block))."""
+        for sign, k, pend in self._pending_deltas:
+            self._levels[k].counts += sign * pend.result()
+        self._pending_deltas.clear()
+
+    # -- query ---------------------------------------------------------------
+    def query(self, min_support: Optional[float] = None) -> ServeResult:
+        """Frequent itemsets (with exact supports) of the current window."""
+        t0 = time.perf_counter()
+        ms = self.min_support if min_support is None else float(min_support)
+        n = self._window_n
+        if n == 0:
+            return ServeResult(itemsets={}, min_count=1, n_transactions=0,
+                               refreshed=False, stale_reason=None,
+                               seconds=time.perf_counter() - t0)
+        min_count = max(1, int(np.ceil(ms * n)))
+        reason = None
+        served = None
+        if not self._refreshed_once:
+            reason = "cold"
+        elif self._churn > self.staleness * max(1, n):
+            reason = "drift"
+        else:
+            self._drain_deltas()
+            served = self._serve_from_tracked(min_count)
+            if served is None:
+                reason = "untracked"
+        refreshed = served is None
+        if refreshed:
+            served = self._refresh(min_count)
+        return ServeResult(itemsets=served, min_count=min_count,
+                           n_transactions=n, refreshed=refreshed,
+                           stale_reason=reason,
+                           seconds=time.perf_counter() - t0)
+
+    def _serve_from_tracked(self, min_count: int) -> Optional[Dict[Itemset, int]]:
+        """Walk the Apriori lattice from the delta-maintained counts; None if
+        any generated candidate escapes the tracked lattice (stale)."""
+        l1_raw = np.nonzero(self._hist >= min_count)[0]
+        # Raw ids outside the refresh item map resolve to -1 via the lookup's
+        # guard slot — a newly frequent item is by itself a staleness signal.
+        dense = self._lookup[np.minimum(l1_raw, len(self._lookup) - 1)]
+        if (dense < 0).any():
+            return None
+        result: Dict[Itemset, int] = {
+            (int(r),): int(self._hist[r]) for r in l1_raw}
+        # item_map is sorted, so dense ids inherit l1_raw's ascending order.
+        level = dense.astype(np.int32).reshape(-1, 1)
+        k = 2
+        while level.size and k <= self.max_k:
+            cand = apriori_gen_matrix(level)
+            if cand.size == 0:
+                break
+            tl = self._levels.get(k)
+            if tl is None:
+                return None  # the refresh lattice never reached this depth
+            rows = tl.rows_of(cand)
+            if (rows < 0).any():
+                return None  # candidate born after the refresh: stale
+            counts = tl.counts[rows]
+            keep = counts >= min_count
+            level = cand[keep]
+            for row, c in zip(level, counts[keep]):
+                result[tuple(int(self._item_map[i]) for i in row)] = int(c)
+            k += 1
+        return result
+
+    # -- refresh -------------------------------------------------------------
+    def _refresh(self, min_count: int) -> Dict[Itemset, int]:
+        """Full re-mine of the current window through the resident runner,
+        rebuilding the tracked lattice (negative border included).
+
+        The lattice is mined at the *margin* threshold
+        ``ceil(margin * min_count)`` — a slack band below the serving
+        threshold — so support-boundary flicker (items and itemsets
+        oscillating around ``min_count`` as the window slides) stays inside
+        the tracked lattice instead of forcing an "untracked" refresh per
+        query.  Counts are exact at any threshold, so the *served* result
+        (filtered at the true ``min_count``) is the batch miner's result by
+        construction: same Job1, same dense remap, same generation closure
+        over frequent items, same counting jobs, then a final exact
+        threshold.  The margin is purely a refresh-rate knob.
+        """
+        runner = self.runner
+        track_count = max(1, int(np.ceil(self.margin * min_count)))
+        # Outstanding deltas target the lattice being discarded; place()
+        # below abandons their device handles.
+        self._pending_deltas.clear()
+        window = self.window()
+        runner.ingest(window)
+        hist, _ = runner.job1()
+        self._check_hist(hist)
+        item_map = np.nonzero(hist >= track_count)[0].astype(np.int64)
+        runner.place(item_map)
+        result: Dict[Itemset, int] = {
+            (int(it),): int(hist[it]) for it in item_map
+            if hist[it] >= min_count}
+        level = np.arange(len(item_map), dtype=np.int32).reshape(-1, 1)
+        if self.device_loop and level.size:
+            levels, freq = self._refresh_ladder(level, track_count)
+            for s, c in freq.items():
+                if c >= min_count:
+                    result[tuple(int(item_map[i]) for i in s)] = int(c)
+        else:
+            levels = {}
+            k = 2
+            cand = apriori_gen_matrix(level)
+            while cand.size and k <= self.max_k:
+                counts, _prof = runner.count(CountJob(
+                    k=k, cand=cand, min_count=track_count, level=level))
+                levels[k] = _TrackedLevel(cand, counts)
+                keep = counts >= track_count
+                level = cand[keep]
+                for row, c in zip(level, counts[keep]):
+                    if c >= min_count:
+                        result[tuple(int(item_map[i]) for i in row)] = int(c)
+                cand = apriori_gen_matrix(level)
+                k += 1
+        self._item_map = item_map
+        lookup = np.full((len(hist) + 1,), -1, np.int64)
+        if len(item_map):
+            lookup[item_map] = np.arange(len(item_map), dtype=np.int64)
+        self._lookup = lookup
+        self._levels = levels
+        self._refreshed_once = True
+        self._churn = 0
+        self.refreshes += 1
+        return result
+
+    def _refresh_ladder(self, level: np.ndarray, track_count: int):
+        """Ladder-mode refresh: the fused ``LevelLadder`` (optionally with
+        on-device trimming) mines the margin-frequent lattice in one dispatch
+        per level; the negative border (candidates the ladder pruned) is then
+        counted through the wave pipeline so the tracked lattice is complete.
+        Counts are exact either way, so the two refresh modes are
+        bit-identical."""
+        from repro.core.itemsets import _rows_member
+        from repro.core.runtime import device_loop as _dl
+
+        freq_by_k: Dict[int, Dict[Itemset, int]] = {}
+        for prof, freq in _dl.ladder(self.runner, level, track_count,
+                                     start_k=2, max_k=self.max_k,
+                                     trim=self.trim):
+            freq_by_k[prof.k] = freq
+        # Border waves ride the async FIFO back-to-back: wave k+1's host-side
+        # generation overlaps wave k's device count.
+        waves = []
+        prev = level
+        k = 2
+        while prev.size and k <= self.max_k:
+            cand = apriori_gen_matrix(prev)
+            if cand.size == 0:
+                break
+            freq = freq_by_k.get(k, {})
+            fmat = level_to_matrix(list(freq))
+            member = (_rows_member(fmat, cand) if fmat.size
+                      else np.zeros((cand.shape[0],), bool))
+            border = cand[~member]
+            pend = self.runner.count_async(CountJob(
+                k=k, cand=border, min_count=track_count,
+                level=prev)) if border.size else None
+            waves.append((k, cand, member, freq, pend))
+            prev = fmat
+            k += 1
+        levels: Dict[int, _TrackedLevel] = {}
+        all_freq: Dict[Itemset, int] = {}
+        for k, cand, member, freq, pend in waves:
+            counts = np.zeros((cand.shape[0],), np.int64)
+            for i in np.flatnonzero(member):
+                counts[i] = freq[tuple(int(x) for x in cand[i])]
+            if pend is not None:
+                bcounts, _prof = pend.result()
+                counts[~member] = bcounts
+            levels[k] = _TrackedLevel(cand, counts)
+            all_freq.update(freq)
+        return levels, all_freq
+
+    def _check_hist(self, hist: np.ndarray) -> None:
+        """Self-check: the device Job1 over the window must equal the
+        delta-maintained histogram — the additivity invariant the whole
+        serving path rests on."""
+        h, m = self._hist, len(hist)
+        if not (np.array_equal(h[:m], hist[:m])
+                and not h[m:].any() and not hist[m:].any()):
+            raise AssertionError(
+                "delta-maintained histogram diverged from the window Job1 "
+                "histogram — the additivity invariant is broken")
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "window": self._window_n,
+            "slots": len(self._slots),
+            "refreshes": self.refreshes,
+            "delta_jobs": self.delta_jobs,
+            "pending_deltas": len(self._pending_deltas),
+            "total_ingested": self.total_ingested,
+            "total_evicted": self.total_evicted,
+            "tracked_levels": sorted(self._levels),
+            "tracked_candidates": int(sum(
+                tl.cand.shape[0] for tl in self._levels.values())),
+        }

@@ -844,3 +844,56 @@ def test_dataset_cache_lru_eviction():
     assert cache.get_or_build("c", lambda: 3) == 3    # evicts b
     assert cache.get_or_build("b", lambda: 9) == 9    # rebuilt: was evicted
     assert cache.stats() == {"hits": 1, "misses": 4, "entries": 2}
+
+
+def test_dataset_cache_concurrent_same_key():
+    """Two runners placing the same digest simultaneously: both builders may
+    race (they run outside the lock by design), last insert wins, and every
+    caller gets a usable, equal value — never an error or a partial entry."""
+    import threading
+
+    from repro.core.runtime import EncodedDatasetCache
+
+    cache = EncodedDatasetCache(max_entries=4)
+    barrier = threading.Barrier(2)
+    built = []
+    results = [None, None]
+
+    def builder():
+        barrier.wait()          # force both misses into the build phase
+        built.append(threading.get_ident())
+        return ("encoded", 42)  # equal values, as real encodes are
+
+    def worker(i):
+        results[i] = cache.get_or_build("digest", builder)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results[0] == results[1] == ("encoded", 42)
+    assert len(built) == 2                      # both raced, by design
+    stats = cache.stats()
+    assert stats["misses"] == 2 and stats["entries"] == 1  # last insert wins
+    # The surviving entry serves subsequent lookups.
+    assert cache.get_or_build("digest", lambda: "nope") == ("encoded", 42)
+
+
+def test_dataset_cache_eviction_while_in_use():
+    """LRU eviction only drops the cache's reference: a runner still holding
+    an evicted entry keeps using it safely, and a re-request rebuilds a
+    fresh, equal entry instead of resurrecting the evicted object."""
+    import numpy as np
+
+    from repro.core.runtime import EncodedDatasetCache
+
+    cache = EncodedDatasetCache(max_entries=1)
+    build = lambda: np.arange(8)
+    held = cache.get_or_build("a", build)       # runner A holds this
+    cache.get_or_build("b", lambda: "other")    # evicts "a" while A mines
+    assert cache.stats()["entries"] == 1
+    assert np.array_equal(held, np.arange(8))   # A's reference is unharmed
+    rebuilt = cache.get_or_build("a", build)    # B re-places the same digest
+    assert rebuilt is not held                  # fresh build, not the old ref
+    assert np.array_equal(rebuilt, held)        # ... but identical content

@@ -1,0 +1,212 @@
+"""Streaming mining service: slot lifecycle, delta-count exactness, and the
+mid-stream parity anchor — any seeded ingest/evict sequence must serve
+queries bit-identical (itemsets AND supports) to a fresh batch mine over
+the exact current window, across stores and backends."""
+
+import numpy as np
+import pytest
+
+from repro.core import FrequentItemsetMiner
+from repro.core.runtime import JaxRunner, ShardedRunner, SimRunner
+from repro.core.stores import ARRAY_STORES
+from repro.data import ArrivalBatch, basket_stream
+from repro.launch.mesh import compat_make_mesh
+from repro.serve import IngestReport, MiningService, ServeResult
+
+
+def _batches(rng, n_batches, size, n_items=36, max_len=7):
+    """Seeded arrival batches of unique-sorted baskets."""
+    out = []
+    for _ in range(n_batches):
+        out.append([
+            sorted(set(rng.integers(0, n_items,
+                                    size=rng.integers(2, max_len)).tolist()))
+            for _ in range(size)])
+    return out
+
+
+def _oracle(window, min_support, max_k):
+    return FrequentItemsetMiner(min_support=min_support, store="perfect_hash",
+                                max_k=max_k).mine(window).itemsets
+
+
+# -- parity anchor -----------------------------------------------------------
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_midstream_parity_across_stores(store):
+    """Every query along a seeded ingest/evict stream equals a fresh batch
+    mine over the exact current window — per store."""
+    rng = np.random.default_rng(hash(store) % (2**32))
+    svc = MiningService(min_support=0.06, store=store, n_slots=5,
+                        slot_size=40, staleness=0.5, max_k=6)
+    for batch in _batches(rng, 6, 60):
+        svc.ingest(batch)
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.06, 6), store
+    svc.close()
+
+
+def test_midstream_parity_sharded():
+    runner = ShardedRunner(store="packed_bitmap",
+                           mesh=compat_make_mesh((1,), ("data",)))
+    rng = np.random.default_rng(5)
+    svc = MiningService(min_support=0.06, runner=runner, n_slots=4,
+                        slot_size=32, staleness=0.5, max_k=6)
+    for batch in _batches(rng, 5, 48):
+        svc.ingest(batch)
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.06, 6)
+    svc.close()
+
+
+@pytest.mark.parametrize("device_loop,trim", [(True, True), (True, False)])
+def test_midstream_parity_ladder_refresh(device_loop, trim):
+    """Ladder-mode refresh (fused level loop + negative-border waves) serves
+    the same answers as the host-SPC refresh and the batch miner."""
+    rng = np.random.default_rng(9)
+    svc = MiningService(min_support=0.08, store="sorted_prefix", n_slots=6,
+                        slot_size=32, staleness=0.5, max_k=6,
+                        device_loop=device_loop, trim=trim)
+    for batch in _batches(rng, 6, 40, n_items=28, max_len=6):
+        svc.ingest(batch)
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.08, 6)
+    svc.close()
+
+
+def test_delta_served_queries_are_exact():
+    """With churn below the staleness threshold, queries are served from the
+    delta-maintained lattice (no refresh) and still match the batch miner —
+    the tentpole's correctness anchor."""
+    rng = np.random.default_rng(3)
+    svc = MiningService(min_support=0.08, store="perfect_hash", n_slots=12,
+                        slot_size=32, staleness=0.6, max_k=6)
+    svc.ingest([t for b in _batches(rng, 12, 32, n_items=24) for t in b])
+    svc.query()                      # cold refresh builds the lattice
+    delta_served = 0
+    for batch in _batches(rng, 8, 32, n_items=24):
+        svc.ingest(batch)            # one slot churn per step
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.08, 6)
+        delta_served += 0 if res.refreshed else 1
+    assert delta_served > 0, "staleness policy never exercised the delta path"
+    svc.close()
+
+
+def test_query_at_other_thresholds_is_exact():
+    """Exact counts + the standard gen closure make any query threshold
+    exact — including thresholds looser or tighter than the service's."""
+    rng = np.random.default_rng(17)
+    svc = MiningService(min_support=0.08, store="perfect_hash", n_slots=8,
+                        slot_size=32, staleness=0.6, max_k=6)
+    svc.ingest([t for b in _batches(rng, 8, 32, n_items=24) for t in b])
+    svc.query()
+    svc.ingest(_batches(rng, 1, 32, n_items=24)[0])
+    for ms in (0.12, 0.08, 0.06):
+        res = svc.query(min_support=ms)
+        assert res.itemsets == _oracle(svc.window(), ms, 6), ms
+    svc.close()
+
+
+# -- slot lifecycle ----------------------------------------------------------
+def test_slot_ring_eviction_and_window():
+    svc = MiningService(min_support=0.5, store="perfect_hash", n_slots=3,
+                        slot_size=4)
+    first = [[1, 2], [2, 3], [1, 3], [1, 2, 3]]
+    rep = svc.ingest(first)
+    assert isinstance(rep, IngestReport)
+    assert (rep.n_ingested, rep.n_evicted, rep.n_slots) == (4, 0, 1)
+    svc.ingest([[4, 5]] * 4)
+    svc.ingest([[6, 7]] * 4)
+    assert svc.window_size == 12 and svc.window()[:4] == first
+    rep = svc.ingest([[8, 9]] * 4)   # ring full: oldest slot leaves whole
+    assert (rep.n_evicted, rep.n_slots) == (4, 3)
+    assert svc.window_size == 12
+    assert svc.window()[0] == [4, 5] and svc.window()[-1] == [8, 9]
+    svc.close()
+
+
+def test_oversized_batch_splits_into_slots():
+    svc = MiningService(min_support=0.5, store="perfect_hash", n_slots=4,
+                        slot_size=8)
+    rep = svc.ingest([[1, 2]] * 20)  # 2.5 slots in one call
+    assert rep.n_slots == 3 and svc.window_size == 20
+    rep = svc.ingest([[3, 4]] * 20)  # wraps: evicts 2 full + 1 partial slot
+    assert rep.n_slots == 4 and svc.window_size <= 4 * 8
+    res = svc.query()
+    assert res.itemsets == _oracle(svc.window(), 0.5, 16)
+    svc.close()
+
+
+def test_empty_window_query():
+    svc = MiningService(min_support=0.1, store="perfect_hash")
+    res = svc.query()
+    assert isinstance(res, ServeResult)
+    assert res.itemsets == {} and res.n_transactions == 0
+    svc.close()
+
+
+def test_stats_and_result_fields():
+    rng = np.random.default_rng(0)
+    svc = MiningService(min_support=0.1, store="perfect_hash", n_slots=4,
+                        slot_size=16)
+    svc.ingest(_batches(rng, 1, 24)[0])
+    res = svc.query()
+    assert res.refreshed and res.stale_reason == "cold"
+    assert res.frequent_at(1) and all(
+        len(s) == 1 for s in res.frequent_at(1))
+    st = svc.stats()
+    assert st["window"] == 24 and st["refreshes"] == 1
+    assert st["tracked_candidates"] >= 0
+    svc.close()
+
+
+# -- backend gating ----------------------------------------------------------
+def test_sim_runner_rejected():
+    """The cost-model backend has no resident device state: loud error, not
+    a silent fallback."""
+    with pytest.raises(ValueError, match="engine-backed"):
+        MiningService(runner=SimRunner(structure="trie"))
+    with pytest.raises(NotImplementedError, match="resident-session"):
+        SimRunner(structure="trie").count_block_async(None, np.zeros((1, 1)))
+
+
+def test_runner_and_store_args_conflict():
+    with pytest.raises(ValueError, match="not both"):
+        MiningService(runner=JaxRunner(store="perfect_hash"),
+                      store="perfect_hash")
+
+
+# -- basket stream -----------------------------------------------------------
+def test_basket_stream_seeded_and_reproducible():
+    a = list(basket_stream("T10I4D100K", batch_size=32, scale=0.002, seed=4))
+    b = list(basket_stream("T10I4D100K", batch_size=32, scale=0.002, seed=4))
+    assert [ab.transactions for ab in a] == [ab.transactions for ab in b]
+    assert [ab.seq for ab in a] == list(range(len(a)))
+    t = [ab.t_arrival for ab in a]
+    assert all(x < y for x, y in zip(t, t[1:]))  # clock advances
+    assert isinstance(a[0], ArrivalBatch) and len(a[0]) > 0
+    c = list(basket_stream("T10I4D100K", batch_size=32, scale=0.002, seed=5))
+    assert [ab.transactions for ab in a] != [ab.transactions for ab in c]
+
+
+def test_basket_stream_repeat_and_cap():
+    n_one_epoch = len(list(
+        basket_stream("T10I4D100K", batch_size=32, scale=0.002, seed=0)))
+    capped = list(basket_stream("T10I4D100K", batch_size=32, scale=0.002,
+                                seed=0, repeat=True,
+                                max_batches=n_one_epoch + 3))
+    assert len(capped) == n_one_epoch + 3
+
+
+def test_stream_feeds_service():
+    """End-to-end: the seeded stream through the service, parity on the way."""
+    svc = MiningService(min_support=0.05, store="hash_bucket", n_slots=4,
+                        slot_size=48, max_k=5)
+    for ab in basket_stream("T10I4D100K", batch_size=48, scale=0.003, seed=2,
+                            repeat=True, max_batches=5):
+        svc.ingest(ab.transactions)
+    res = svc.query()
+    oracle = FrequentItemsetMiner(min_support=0.05, store="hash_bucket",
+                                  max_k=5).mine(svc.window()).itemsets
+    assert res.itemsets == oracle
+    svc.close()
