@@ -159,6 +159,45 @@ print(f"serving smoke OK: 10 ingest/query rounds bit-identical to batch "
       f"{st['delta_jobs']} delta jobs, window {st['window']})")
 PY
 
+echo "== smoke: per-basket eviction + certified stale serving =="
+python - <<'PY'
+import numpy as np
+from repro.core import FrequentItemsetMiner
+from repro.data import basket_stream
+from repro.serve import MiningService
+
+svc = MiningService(min_support=0.05, store="packed_bitmap", n_slots=4,
+                    slot_size=48, staleness=0.5, max_k=6, eviction="basket")
+stream = basket_stream("T10I4D100K", batch_size=48, scale=0.005, seed=11,
+                       repeat=True, max_batches=8)
+stale = 0
+for ab in stream:
+    svc.ingest(ab.transactions)
+    if ab.seq == 3:
+        svc.evict(5)                       # per-basket, mid-stream
+    res = svc.query(staleness=4.0)         # never blocks on a refresh
+    cert = res.certificate
+    assert cert is not None
+    if cert.is_exact(res.min_count):
+        oracle = FrequentItemsetMiner(min_support=0.05, store="packed_bitmap",
+                                      max_k=6).mine(svc.window())
+        assert res.itemsets == oracle.itemsets, (
+            f"certified-exact answer diverged at batch {ab.seq}")
+    else:
+        stale += 1
+exact = svc.query()                        # exact over the final window
+oracle = FrequentItemsetMiner(min_support=0.05, store="packed_bitmap",
+                              max_k=6).mine(svc.window())
+assert exact.itemsets == oracle.itemsets, "final exact query diverged"
+cap = 4 * 48
+assert exact.n_transactions <= cap, (exact.n_transactions, cap)
+st = svc.stats()
+svc.close()
+print(f"hardening smoke OK: basket-capped window ({exact.n_transactions} <= "
+      f"{cap}), mid-stream evict(5), {stale} certified-stale answers, final "
+      f"exact query bit-identical ({st['refreshes']} refreshes)")
+PY
+
 echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
 

@@ -58,14 +58,20 @@ class EncodedDatasetCache:
         self.misses = 0
 
     def get_or_build(self, key: Hashable, builder: Callable[[], object]):
+        # Hit/miss accounting happens entirely at lookup, inside one lock
+        # section: every call is classified exactly once, at the moment it
+        # observes the cache, so ``hits + misses == calls`` holds under any
+        # thread interleaving (a miss counted at insert time instead would
+        # let a call that races with its own builder be observed mid-flight
+        # with neither counter bumped).
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
                 self.hits += 1
                 return self._entries[key]
+            self.misses += 1
         value = builder()
         with self._lock:
-            self.misses += 1
             self._entries[key] = value
             self._entries.move_to_end(key)
             while len(self._entries) > self.max_entries:

@@ -92,6 +92,21 @@ class PendingCounts:
     def done(self) -> bool:
         return all(p is not None for p in self._parts)
 
+    def poll(self) -> bool:
+        """Non-blocking progress check: fetch whatever chunk results the
+        device has already finished (in FIFO order), then report whether
+        this wave is fully joined.  Never blocks on device compute — the
+        background-refresh pump calls this from the ingest path, where a
+        stall would defeat the point of refreshing off the query path.
+        """
+        if self._cancelled:
+            raise RuntimeError(
+                "counting wave was cancelled: place() re-placed the DB "
+                "while this handle's chunks were still in flight"
+            )
+        self._engine.drain_ready()
+        return self.done
+
     def result(self) -> np.ndarray:
         while not self.done:
             if self._cancelled or not self._engine._queue:
@@ -342,6 +357,26 @@ class MapReduceEngine:
         pending, slot, dev, c = self._queue.popleft()
         counts = np.asarray(jax.device_get(dev))
         pending._parts[slot] = counts[:c].astype(np.int64)
+
+    def drain_ready(self) -> int:
+        """Fetch every *leading* queue entry whose device result is already
+        computed; never block.  Results resolve strictly in dispatch order
+        (same as ``_force_oldest``), so partial drains are safe at any point.
+        Returns the number of chunks joined.
+        """
+        joined = 0
+        while self._queue:
+            dev = self._queue[0][2]
+            try:
+                ready = all(leaf.is_ready()
+                            for leaf in jax.tree.leaves(dev))
+            except AttributeError:
+                ready = True  # no readiness API: device_get below is cheap
+            if not ready:
+                break
+            self._force_oldest()
+            joined += 1
+        return joined
 
     def count_candidates_async(self, cand: np.ndarray) -> PendingCounts:
         """Dispatch a counting wave without blocking.

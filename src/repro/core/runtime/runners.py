@@ -204,6 +204,9 @@ class _Done:
     def __init__(self, counts: np.ndarray, profile: JobProfile) -> None:
         self._out = (counts, profile)
 
+    def poll(self) -> bool:
+        return True
+
     def result(self) -> Tuple[np.ndarray, JobProfile]:
         return self._out
 
@@ -614,6 +617,11 @@ class _JaxPending:
         self._job = job
         self._pending = pending
         self._encode_s = encode_s
+
+    def poll(self) -> bool:
+        """Non-blocking: drain whatever the device has finished, report
+        whether this job's counts are fully joined (see PendingCounts.poll)."""
+        return self._pending.poll()
 
     def result(self) -> Tuple[np.ndarray, JobProfile]:
         t0 = time.perf_counter()

@@ -168,18 +168,56 @@ class DeltaCountMixin:
     """
 
     @classmethod
-    def count_delta(cls, counts, trans_block: dict, cands: dict):
-        """counts + the block's contribution (jit-safe, pure)."""
+    def apply_delta(cls, counts, trans_block: dict, cands: dict, sign: int):
+        """counts + sign * the block's contribution (jit-safe, pure).
+
+        The signed form both directions share: ``sign=+1`` folds an ingested
+        block in, ``sign=-1`` is the exact inverse — including on a *one-row*
+        block, the serving layer's per-basket eviction granularity (evicting
+        a single transaction is one signed delta over a (1, L) block).
+        """
         import jax.numpy as jnp
 
-        return counts + cls.count_block(trans_block, cands).astype(jnp.int64)
+        return counts + sign * cls.count_block(trans_block, cands).astype(
+            jnp.int64)
+
+    @classmethod
+    def count_delta(cls, counts, trans_block: dict, cands: dict):
+        """counts + the block's contribution (jit-safe, pure)."""
+        return cls.apply_delta(counts, trans_block, cands, +1)
 
     @classmethod
     def uncount_delta(cls, counts, trans_block: dict, cands: dict):
         """counts - the block's contribution (exact inverse of count_delta)."""
-        import jax.numpy as jnp
+        return cls.apply_delta(counts, trans_block, cands, -1)
 
-        return counts - cls.count_block(trans_block, cands).astype(jnp.int64)
+
+def tracked_keep_mask(cand: np.ndarray, prev_freq: np.ndarray) -> np.ndarray:
+    """bool[C]: which rows of a tracked (C, k) candidate level survive a
+    lattice compaction given the *currently* frequent rows of level k-1.
+
+    A tracked row is worth keeping exactly when the serving walk could still
+    generate it — every (k-1)-subset is a row of ``prev_freq`` (the level
+    below, filtered at the tracked threshold on current counts).  Rows whose
+    support has drained to zero *and* left the generatable closure, and
+    negative-border rows no longer adjacent to any frequent itemset, fall
+    out; rows that are currently frequent always survive (their subsets are
+    frequent by the Apriori property, hence in ``prev_freq``).  Both inputs
+    must be lexicographically sorted with dense ids — the tracked lattice's
+    native layout.
+    """
+    from repro.core.itemsets import _rows_member  # lazy: itemsets imports us
+
+    cand = np.asarray(cand)
+    if cand.size == 0:
+        return np.zeros((cand.shape[0] if cand.ndim == 2 else 0,), bool)
+    if prev_freq.size == 0:
+        return np.zeros((cand.shape[0],), bool)
+    keep = np.ones((cand.shape[0],), bool)
+    for drop in range(cand.shape[1]):
+        keep &= _rows_member(np.asarray(prev_freq, cand.dtype),
+                             np.delete(cand, drop, axis=1))
+    return keep
 
 
 def pad_candidates(cand: np.ndarray, f_pad: int, align: int = 128,

@@ -93,6 +93,14 @@ def main() -> None:
     ap.add_argument("--n-slots", type=int, default=8)
     ap.add_argument("--slot-size", type=int, default=256)
     ap.add_argument("--staleness", type=float, default=0.5)
+    ap.add_argument("--eviction", choices=["slot", "basket"], default="slot",
+                    help="window semantics: whole-slot or per-basket evict")
+    ap.add_argument("--query-staleness", type=float, default=None,
+                    help="serve approximate answers within this per-query "
+                    "staleness budget (certified; never blocks on a refresh)")
+    ap.add_argument("--compact-churn", type=float, default=4.0,
+                    help="compact the tracked lattice every N windows of "
+                    "drained delta volume (0 disables)")
     ap.add_argument("--max-k", type=int, default=8)
     ap.add_argument("--device-loop", action="store_true",
                     help="refresh through the fused LevelLadder")
@@ -111,10 +119,11 @@ def main() -> None:
         min_support=args.support, store=None if mesh else args.store,
         mesh=mesh, n_slots=args.n_slots, slot_size=args.slot_size,
         staleness=args.staleness, max_k=args.max_k,
-        device_loop=args.device_loop, trim=not args.no_trim)
+        device_loop=args.device_loop, trim=not args.no_trim,
+        eviction=args.eviction, compact_churn=args.compact_churn)
     print(f"mining service: {svc.runner.describe()} | "
-          f"window {args.n_slots}x{args.slot_size} | "
-          f"support {args.support} | staleness {args.staleness}")
+          f"window {args.n_slots}x{args.slot_size} ({args.eviction}-evicted)"
+          f" | support {args.support} | staleness {args.staleness}")
 
     ingest_s = 0.0
     ingested = 0
@@ -129,23 +138,35 @@ def main() -> None:
         ingest_s += rep.seconds
         ingested += rep.n_ingested
         if (ab.seq + 1) % args.query_every == 0:
-            res = svc.query()
+            res = svc.query(staleness=args.query_staleness)
             n_queries += 1
             q_lat.append(res.seconds)
             delta_served += 0 if res.refreshed else 1
-            mode = res.stale_reason if res.refreshed else "delta"
+            if res.refreshed:
+                mode = res.stale_reason or "refresh"
+            elif res.stale_reason == "stale":
+                mode = "stale"
+            else:
+                mode = "delta"
+            cert = ""
+            if res.certificate is not None and not \
+                    res.certificate.is_exact(res.min_count):
+                cert = (f" | drift<={res.certificate.max_drift}"
+                        f" miss<{res.certificate.miss_bound}")
             print(f"  batch {ab.seq + 1:4d} | window {res.n_transactions:6d}"
                   f" | {len(res.itemsets):5d} frequent | {mode:9s}"
-                  f" | {res.seconds * 1e3:8.1f} ms")
+                  f" | {res.seconds * 1e3:8.1f} ms{cert}")
     st = svc.stats()
     svc.close()
     lat = np.array(q_lat) if q_lat else np.zeros((1,))
     print(f"ingested {ingested} baskets in {ingest_s:.2f}s "
           f"({ingested / max(ingest_s, 1e-9):,.0f} txn/s); "
-          f"{delta_served}/{n_queries} queries delta-served; "
+          f"{delta_served}/{n_queries} queries delta-served "
+          f"({st['stale_served']} certified-stale); "
           f"query p50 {np.percentile(lat, 50) * 1e3:.1f} ms "
           f"p95 {np.percentile(lat, 95) * 1e3:.1f} ms; "
-          f"{st['refreshes']} refreshes, {st['delta_jobs']} delta jobs")
+          f"{st['refreshes']} refreshes, {st['delta_jobs']} delta jobs, "
+          f"{st['compactions']} compactions")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,15 @@ of transactions.  The legacy LM ``ServeEngine`` lives on in
 in the model stack.
 """
 
-from repro.serve.engine import IngestReport, MiningService, ServeResult
+from repro.serve.engine import (
+    ErrorCertificate,
+    IngestReport,
+    MiningService,
+    ServeResult,
+)
 
-__all__ = ["MiningService", "ServeResult", "IngestReport", "ServeEngine"]
+__all__ = ["MiningService", "ServeResult", "IngestReport",
+           "ErrorCertificate", "ServeEngine"]
 
 
 def __getattr__(name):

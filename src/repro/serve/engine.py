@@ -14,34 +14,59 @@ transaction sets, so the service maintains, between full refreshes:
   on ingest/evict) — L1 at any threshold falls out directly; and
 * the full candidate lattice of the last refresh — every candidate matrix
   the level loop counted, frequent or not (the *negative border* included),
-  with counts delta-updated per ingested/evicted slot through the stores'
-  ``count_delta``/``uncount_delta`` path (add the new block's contribution,
-  subtract the evicted block's — bit-identical to a recount).
+  with counts delta-updated per ingested/evicted block through the stores'
+  signed ``apply_delta`` path (add the new block's contribution, subtract
+  the evicted block's — bit-identical to a recount).
 
 A query walks the Apriori lattice from those tracked counts: L1 from the
 histogram, ``C_k = apriori_gen(L_{k-1})`` per level, counts looked up in the
 tracked lattice.  If every generated candidate is tracked, the answer is
 *provably* the batch miner's answer over the exact current window — same
 candidate generation, same exact counts, same thresholding.  If any
-candidate escapes the tracked set (an itemset crossed the threshold since
-the refresh and generated new children), the walk declares the state stale
-and triggers a refresh: a full re-mine of the current window through the
-resident runner — the SPC wave pipeline, or ``device_loop.LevelLadder``
-(fused, optionally trimmed) plus one negative-border counting pass.  A
-``staleness`` knob additionally forces a refresh once the fraction of the
-window replaced since the last refresh exceeds the threshold, bounding how
-much delta work a single query may lean on.  The ``margin`` knob mines the
-refresh lattice at ``ceil(margin * min_count)`` — a slack band below the
-serving threshold — so support-boundary flicker as the window slides stays
-inside the tracked lattice instead of forcing a refresh per query; the
-served result is always filtered at the true threshold, so the margin
-never changes answers, only the refresh rate.
+candidate escapes the tracked set, the walk declares the state stale and a
+refresh re-mines the current window through the resident runner.  The
+``margin`` knob mines the refresh lattice at ``ceil(margin * min_count)``
+(a slack band below the serving threshold) so support-boundary flicker
+stays inside the tracked lattice; the served result is always filtered at
+the true threshold, so the margin never changes answers, only the refresh
+rate.  Queries below the margin band ("below_track") always refresh at the
+queried threshold — the tracked lattice is provably incomplete there.
 
-Delta dispatch is async: ingest encodes each slot block over the tracked
-item map and pushes per-level delta counting jobs through the engine's
+Hardening (graceful degradation instead of stalling):
+
+* **Per-basket eviction** (``eviction="basket"`` / ``evict(n)``): individual
+  transactions leave the head slot through a signed delta on the sub-slot
+  block — down to a one-row block — so the window cap is exact in baskets,
+  not slots, and parity with a batch mine of the exact window is preserved
+  at any eviction granularity.
+* **Bounded-staleness serving** (``query(staleness=s)``): when the tracked
+  lattice has drifted but churn is within the caller's budget (``churn <=
+  s * window``), the query answers *immediately* from current counts and
+  attaches an :class:`ErrorCertificate`: reported supports are within
+  ``max_drift`` (the un-joined delta volume) of exact, and any itemset
+  missing from the answer has true support below ``miss_bound``.  L1 is
+  always exact (the histogram is maintained synchronously).  A certificate
+  with ``max_drift == 0`` and ``miss_bound == min_count`` *is* an exactness
+  proof — the default ``staleness=None`` path only ever returns those.
+* **Background refresh**: the lattice rebuild runs as a cooperative state
+  machine over the engine's double-buffered wave FIFO, advanced
+  non-blockingly from ``ingest()`` and stale queries (``poll()`` on pending
+  wave handles).  Blocks that arrive mid-refresh are logged and *replayed*
+  onto the new lattice at handoff, so old and new lattices never mix; the
+  old lattice keeps taking deltas during the rebuild, so stale answers stay
+  tight until the handoff lands.
+* **Compaction**: after sustained churn, tracked rows that fell out of the
+  generatable closure (support drained, or negative-border rows orphaned by
+  their parents going infrequent) are pruned — ``tracked_keep_mask`` keeps
+  exactly the rows whose every (k-1)-subset is still track-frequent, which
+  is every row any walk at a threshold >= the track threshold can reach, so
+  compaction can never cause a new staleness escape.
+
+Delta dispatch is async: ingest encodes each block over the tracked item
+map and pushes per-level delta counting jobs through the engine's
 double-buffered FIFO (``count_block_async``), so device delta counting
-overlaps the host's next-batch ingest; the counts are only joined when a
-query actually needs them.
+overlaps the host's next-batch ingest; results are joined non-blockingly
+(``drain_ready``) as they land and forced only when a query needs exactness.
 """
 
 from __future__ import annotations
@@ -55,19 +80,63 @@ import numpy as np
 
 from repro.core.itemsets import Itemset, apriori_gen_matrix, level_to_matrix
 from repro.core.runtime import BaseRunner, CountJob, make_runner
-from repro.core.stores.base import ITEM_PAD, padded_from_transactions
+from repro.core.stores.base import (
+    ITEM_PAD,
+    padded_from_transactions,
+    tracked_keep_mask,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorCertificate:
+    """Provable error bounds for one served answer.
+
+    ``max_drift``:  every *reported* itemset's support is within this many
+                    counts of its exact support over the current window
+                    (the volume of dispatched-but-unjoined delta blocks —
+                    each un-joined transaction can move any count by at
+                    most 1).
+    ``miss_bound``: every itemset *absent* from the answer has exact
+                    support strictly below this.  For a fully tracked walk
+                    that is ``min_count + max_drift`` (a pruned branch may
+                    have been under-counted by the drift); if the walk had
+                    to skip untracked candidates it widens to
+                    ``track_count_ref + ingested_since_refresh`` (an
+                    itemset never tracked was below the track threshold at
+                    refresh time and has gained at most the ingested volume
+                    since).
+    ``max_drift == 0`` and ``miss_bound == min_count`` certify exactness.
+    """
+
+    max_drift: int
+    miss_bound: int
+    undrained: int          # transactions in un-joined delta blocks
+    churn: int              # transactions ingested+evicted since refresh
+    refresh_in_flight: bool
+
+    def is_exact(self, min_count: int) -> bool:
+        return self.max_drift == 0 and self.miss_bound <= min_count
 
 
 @dataclasses.dataclass
 class ServeResult:
-    """One served query: the exact frequent itemsets of the current window."""
+    """One served query over the current window.
+
+    ``stale_reason``: why the exact tracked walk was not (or could not be)
+    used directly — ``"cold"`` / ``"drift"`` / ``"untracked"`` /
+    ``"below_track"`` escaped to a blocking refresh; ``"stale"`` means the
+    answer was served approximately under a ``staleness=`` budget (see
+    ``certificate``); ``None`` means the tracked walk served exactly.
+    """
 
     itemsets: Dict[Itemset, int]   # frequent itemset -> support count
     min_count: int
     n_transactions: int            # window size the query was served over
-    refreshed: bool                # True if this query triggered a full refresh
-    stale_reason: Optional[str]    # "cold" | "drift" | "untracked" | None
+    refreshed: bool                # True if this query ran a blocking refresh
+    stale_reason: Optional[str]
     seconds: float = 0.0
+    certificate: Optional[ErrorCertificate] = None
+    refresh_in_flight: bool = False
 
     def frequent_at(self, k: int) -> Dict[Itemset, int]:
         return {s: c for s, c in self.itemsets.items() if len(s) == k}
@@ -75,7 +144,7 @@ class ServeResult:
 
 @dataclasses.dataclass
 class IngestReport:
-    """One ingest call: slots filled/evicted and the async delta dispatches."""
+    """One ingest/evict call: window movement and async delta dispatches."""
 
     n_ingested: int
     n_evicted: int
@@ -87,8 +156,9 @@ class IngestReport:
 
 @dataclasses.dataclass
 class _Slot:
-    """One fixed-size window slot: the raw baskets plus their padded matrix
-    (kept so eviction can uncount the exact block it once counted)."""
+    """One window slot: the raw baskets plus their padded matrix (kept so
+    eviction can uncount the exact rows it once counted — per-basket
+    eviction uncounts a leading sub-block and keeps the tail)."""
 
     transactions: List[List[int]]
     padded: np.ndarray             # (n, L) int32 raw ids, ITEM_PAD-padded
@@ -116,14 +186,22 @@ class _TrackedLevel:
             dtype=np.int64, count=q.shape[0])
 
 
+# One in-flight delta record: every per-level job dispatched for one signed
+# block, joined atomically (all levels or none) so tracked counts always
+# reflect whole blocks and the un-joined volume is countable in baskets.
+_DeltaRecord = Tuple[int, int, List[Tuple[int, object]]]  # (sign, n, jobs)
+
+
 class MiningService:
     """Incremental frequent-itemset server over a slot-based sliding window.
 
     ``ingest(batch)`` appends baskets to fixed-size slots (evicting the
-    oldest slots once ``n_slots`` is reached) and dispatches async delta
-    counting; ``query()`` returns the frequent itemsets of the exact current
-    window — bit-identical, itemsets AND supports, to a fresh batch
-    ``FrequentItemsetMiner`` run over ``window()``.
+    oldest slots — or, with ``eviction="basket"``, the oldest individual
+    baskets — once the window is full) and dispatches async delta counting;
+    ``query()`` returns the frequent itemsets of the exact current window —
+    bit-identical, itemsets AND supports, to a fresh batch
+    ``FrequentItemsetMiner`` run over ``window()``.  ``query(staleness=s)``
+    trades exactness for latency under a certified error bound.
 
     Requires an engine-backed runner (Jax or Sharded): the resident window
     DB, the delta path, and the ladder refresh all live on the engine.
@@ -142,6 +220,8 @@ class MiningService:
         max_k: int = 16,
         device_loop: bool = False,
         trim: bool = True,
+        eviction: str = "slot",
+        compact_churn: float = 4.0,
     ) -> None:
         if runner is not None and (store is not None or mesh is not None):
             raise ValueError(
@@ -149,6 +229,9 @@ class MiningService:
                 "store/mesh — not both")
         if n_slots < 1 or slot_size < 1:
             raise ValueError("n_slots and slot_size must be >= 1")
+        if eviction not in ("slot", "basket"):
+            raise ValueError(
+                f"eviction must be 'slot' or 'basket', got {eviction!r}")
         self.min_support = float(min_support)
         self.n_slots = int(n_slots)
         self.slot_size = int(slot_size)
@@ -159,6 +242,10 @@ class MiningService:
         self.max_k = int(max_k)
         self.device_loop = bool(device_loop)
         self.trim = bool(trim)
+        self.eviction = eviction
+        # Compact the tracked lattice once the drained delta volume since the
+        # last compaction exceeds this multiple of the window (0 disables).
+        self.compact_churn = float(compact_churn)
         self.runner = runner if runner is not None else make_runner(
             store=store if store is not None else "perfect_hash", mesh=mesh)
         if not hasattr(self.runner, "engine"):
@@ -176,13 +263,21 @@ class MiningService:
         self._lookup = np.full((1,), -1, np.int64)  # raw -> dense (or -1)
         self._levels: Dict[int, _TrackedLevel] = {}
         self._refreshed_once = False
-        self._churn = 0         # txns added+evicted since the last refresh
-        self._pending_deltas: List[Tuple[int, int, object]] = []
+        self._track_count_ref = 0   # absolute threshold the lattice tracks
+        self._churn = 0             # txns added+evicted since the last refresh
+        self._ingested_since_refresh = 0
+        self._evicted_since_refresh = 0
+        self._pending_deltas: List[_DeltaRecord] = []
+        self._drained_since_compact = 0
+        self._refresh_job: Optional[dict] = None
         # -- telemetry -----------------------------------------------------
         self.refreshes = 0
         self.delta_jobs = 0
         self.total_ingested = 0
         self.total_evicted = 0
+        self.stale_served = 0
+        self.compactions = 0
+        self.compacted_rows = 0
 
     # -- window ------------------------------------------------------------
     @property
@@ -190,11 +285,12 @@ class MiningService:
         return self._window_n
 
     def window(self) -> List[List[int]]:
-        """The exact current window contents, oldest slot first — the input
-        a parity-checking batch mine must run over."""
+        """The exact current window contents, oldest basket first — the
+        input a parity-checking batch mine must run over."""
         return [t for slot in self._slots for t in slot.transactions]
 
     def close(self) -> None:
+        self._abort_refresh()
         self.runner.close()
 
     def __enter__(self) -> "MiningService":
@@ -205,43 +301,97 @@ class MiningService:
 
     # -- ingest / evict ------------------------------------------------------
     def ingest(self, transactions: Sequence[Sequence[int]]) -> IngestReport:
-        """Append a batch of baskets; evict expired slots; dispatch deltas.
+        """Append a batch of baskets; evict expired ones; dispatch deltas.
 
         The batch is cut into ``slot_size`` blocks, each becoming one slot.
-        When the ring is full the oldest slot is evicted first — its counts
-        are *subtracted* (uncount) exactly as the new block's are added, so
+        In ``"slot"`` mode the oldest whole slot is evicted once the ring is
+        full; in ``"basket"`` mode the window holds exactly
+        ``n_slots * slot_size`` baskets and only the overflow is evicted —
+        per basket, from the head slot.  Either way the evicted rows'
+        counts are *subtracted* exactly as the new block's are added, so
         tracked counts always equal a fresh count over the live window.
         """
         t0 = time.perf_counter()
         batch = [list(t) for t in transactions]
         added = evicted = 0
         jobs0 = self.delta_jobs
+        cap = self.n_slots * self.slot_size
         for i in range(0, len(batch), self.slot_size):
             block = batch[i : i + self.slot_size]
-            if len(self._slots) == self.n_slots:
+            if self.eviction == "basket":
+                overflow = self._window_n + len(block) - cap
+                if overflow > 0:
+                    evicted += self._evict_baskets(overflow)
+            elif len(self._slots) == self.n_slots:
                 old = self._slots.popleft()
-                self._apply_block(old, sign=-1)
+                self._apply_padded(old.padded, sign=-1)
                 evicted += len(old.transactions)
                 self._window_n -= len(old.transactions)
             padded, _ = padded_from_transactions(block)
             slot = _Slot(transactions=block, padded=padded, seq=self._seq)
             self._seq += 1
             self._slots.append(slot)
-            self._apply_block(slot, sign=+1)
+            self._apply_padded(padded, sign=+1)
             self._window_n += len(block)
             added += len(block)
         self.total_ingested += added
         self.total_evicted += evicted
+        # Off-query-path upkeep: join whatever delta results already landed
+        # and advance any in-flight background refresh by one unit — both
+        # non-blocking, so ingest latency stays bounded.
+        self._drain_deltas(block=False)
+        self._pump_refresh(block=False)
         return IngestReport(
             n_ingested=added, n_evicted=evicted, n_slots=len(self._slots),
             window=self._window_n, delta_jobs=self.delta_jobs - jobs0,
             seconds=time.perf_counter() - t0)
 
-    def _apply_block(self, slot: _Slot, sign: int) -> None:
-        """Fold one slot into (sign=+1) or out of (sign=-1) the incremental
-        state: exact histogram deltas on host, per-level candidate deltas
-        dispatched async on device."""
-        real = slot.padded[slot.padded < ITEM_PAD]
+    def evict(self, n: int = 1) -> IngestReport:
+        """Evict the ``n`` oldest baskets (sub-slot granularity).
+
+        Each maximal run of contiguous head-slot rows leaves through one
+        signed delta block — evicting a single basket is literally a
+        one-row ``apply_delta`` — so the window stays bit-identical to a
+        batch mine over the remaining baskets at any granularity.
+        """
+        t0 = time.perf_counter()
+        jobs0 = self.delta_jobs
+        evicted = self._evict_baskets(int(n))
+        self.total_evicted += evicted
+        self._drain_deltas(block=False)
+        self._pump_refresh(block=False)
+        return IngestReport(
+            n_ingested=0, n_evicted=evicted, n_slots=len(self._slots),
+            window=self._window_n, delta_jobs=self.delta_jobs - jobs0,
+            seconds=time.perf_counter() - t0)
+
+    def _evict_baskets(self, n: int) -> int:
+        """Remove the ``n`` oldest baskets from the head of the window,
+        uncounting each head-slot run as one signed sub-block."""
+        evicted = 0
+        while n > 0 and self._slots:
+            head = self._slots[0]
+            m = min(n, len(head.transactions))
+            self._apply_padded(head.padded[:m], sign=-1)
+            head.transactions = head.transactions[m:]
+            head.padded = head.padded[m:]
+            self._window_n -= m
+            evicted += m
+            n -= m
+            if not head.transactions:
+                self._slots.popleft()
+        return evicted
+
+    def _apply_padded(self, padded: np.ndarray, sign: int) -> None:
+        """Fold one transaction block into (sign=+1) or out of (sign=-1) the
+        incremental state: exact histogram delta on host, per-level
+        candidate deltas dispatched async on device, and — while a refresh
+        is in flight — a replay-log entry so the block also reaches the
+        *new* lattice at handoff."""
+        n = padded.shape[0]
+        if n == 0:
+            return
+        real = padded[padded < ITEM_PAD]
         if real.size:
             top = int(real.max()) + 1
             if top > len(self._hist):
@@ -250,39 +400,137 @@ class MiningService:
             # Rows are unique-sorted, so a flat bincount is presence counting.
             self._hist += sign * np.bincount(real, minlength=len(self._hist)
                                              ).astype(np.int64)
-        self._churn += len(slot.transactions)
-        if not self._levels:
+        self._churn += n
+        if sign > 0:
+            self._ingested_since_refresh += n
+        else:
+            self._evicted_since_refresh += n
+        if self._refresh_job is not None:
+            self._refresh_job["log"].append((sign, padded))
+        self._dispatch_deltas(padded, sign)
+
+    def _dispatch_deltas(self, padded: np.ndarray, sign: int) -> None:
+        """Dispatch one block's per-level delta jobs (async, grouped into a
+        single record so the block joins atomically)."""
+        if not self._levels or padded.shape[0] == 0:
             return
-        enc = self.runner.encode_block(slot.padded, self._item_map)
+        if not (padded < ITEM_PAD).any():
+            return  # all-empty transactions support nothing: exact no-op
+        enc = None
+        jobs: List[Tuple[int, object]] = []
         for k, tl in self._levels.items():
             if tl.cand.size:
-                pend = self.runner.count_block_async(enc, tl.cand)
-                self._pending_deltas.append((sign, k, pend))
+                if enc is None:
+                    enc = self.runner.encode_block(padded, self._item_map)
+                jobs.append((k, self.runner.count_block_async(enc, tl.cand)))
                 self.delta_jobs += 1
+        if jobs:
+            self._pending_deltas.append((sign, padded.shape[0], jobs))
 
-    def _drain_deltas(self) -> None:
-        """Join all outstanding delta jobs into the tracked counts (exact:
-        counts += count(added block) - count(evicted block))."""
-        for sign, k, pend in self._pending_deltas:
-            self._levels[k].counts += sign * pend.result()
-        self._pending_deltas.clear()
+    def _undrained(self) -> int:
+        """Transactions whose delta blocks are dispatched but not joined —
+        the volume every certificate's drift bound is derived from."""
+        return sum(n for _, n, _ in self._pending_deltas)
+
+    def _drain_deltas(self, block: bool = True) -> None:
+        """Join outstanding delta jobs into the tracked counts (exact:
+        counts += count(added block) - count(evicted block)).
+
+        ``block=False`` joins only the leading records whose every per-level
+        job has already finished on device (``poll``) — never blocks, so the
+        ingest path can keep counts near-current for free.
+        """
+        while self._pending_deltas:
+            sign, n, jobs = self._pending_deltas[0]
+            if not block and not all(p.poll() for _, p in jobs):
+                break
+            for k, pend in jobs:
+                self._levels[k].counts += sign * pend.result()
+            self._drained_since_compact += n
+            self._pending_deltas.pop(0)
+        if not self._pending_deltas:
+            self._maybe_compact()
+
+    # -- lattice compaction --------------------------------------------------
+    def _maybe_compact(self) -> None:
+        if (not self.compact_churn or not self._levels
+                or not self._refreshed_once):
+            return
+        if (self._drained_since_compact
+                < self.compact_churn * max(1, self._window_n)):
+            return
+        self._compact()
+
+    def _compact(self) -> None:
+        """Prune tracked rows outside the generatable closure at the track
+        threshold: a row survives iff every (k-1)-subset is a surviving row
+        with *current* count >= ``_track_count_ref``.  Any walk at a
+        threshold >= the track threshold only generates candidates whose
+        subsets are all track-frequent (``apriori_gen_matrix`` subset-prunes
+        against the walk's own level), so every reachable row survives —
+        compaction never creates a new staleness escape; it only drops
+        zero-support garbage and orphaned negative-border rows.
+
+        Only runs with no pending deltas (``_drain_deltas``): in-flight
+        results are sized to the pre-compaction candidate matrices.
+        """
+        assert not self._pending_deltas
+        tc = self._track_count_ref
+        prev = np.flatnonzero(
+            self._hist[self._item_map] >= tc).astype(np.int32).reshape(-1, 1)
+        removed = 0
+        for k in sorted(self._levels):
+            tl = self._levels[k]
+            keep = tracked_keep_mask(tl.cand, prev)
+            removed += int(tl.cand.shape[0] - keep.sum())
+            cand = tl.cand[keep]          # boolean mask keeps lex order
+            counts = tl.counts[keep]
+            self._levels[k] = _TrackedLevel(cand, counts)
+            prev = cand[counts >= tc]
+        self.compactions += 1
+        self.compacted_rows += removed
+        self._drained_since_compact = 0
 
     # -- query ---------------------------------------------------------------
-    def query(self, min_support: Optional[float] = None) -> ServeResult:
-        """Frequent itemsets (with exact supports) of the current window."""
+    def query(self, min_support: Optional[float] = None,
+              staleness: Optional[float] = None) -> ServeResult:
+        """Frequent itemsets of the current window.
+
+        ``staleness=None`` (default): exact — the answer is bit-identical
+        to a batch mine of ``window()``, refreshing (blocking) if needed.
+        ``staleness=s``: if the churn since the last refresh is within
+        ``s * window``, answer immediately from current counts with an
+        :class:`ErrorCertificate`; beyond the budget, fall back to exact.
+        """
         t0 = time.perf_counter()
         ms = self.min_support if min_support is None else float(min_support)
+        self._pump_refresh(block=False)
         n = self._window_n
+        live = self._refresh_job is not None
         if n == 0:
-            return ServeResult(itemsets={}, min_count=1, n_transactions=0,
-                               refreshed=False, stale_reason=None,
-                               seconds=time.perf_counter() - t0)
+            return ServeResult(
+                itemsets={}, min_count=1, n_transactions=0, refreshed=False,
+                stale_reason=None, seconds=time.perf_counter() - t0,
+                certificate=ErrorCertificate(0, 1, 0, 0, live),
+                refresh_in_flight=live)
         min_count = max(1, int(np.ceil(ms * n)))
-        reason = None
-        served = None
+        reason: Optional[str] = None
+        served: Optional[Dict[Itemset, int]] = None
+        cert: Optional[ErrorCertificate] = None
         if not self._refreshed_once:
             reason = "cold"
-        elif self._churn > self.staleness * max(1, n):
+        elif min_count < self._track_count_ref:
+            # The lattice was mined at a higher absolute threshold than this
+            # query asks for — it is provably incomplete below the margin
+            # band, so refresh at the *queried* threshold instead of walking
+            # (and instead of ever serving it approximately).
+            reason = "below_track"
+        elif staleness is not None:
+            if self._churn > float(staleness) * n:
+                reason = "drift"     # over the caller's budget: go exact
+            else:
+                served, cert, reason = self._serve_approx(min_count, n)
+        elif self._churn > self.staleness * n:
             reason = "drift"
         else:
             self._drain_deltas()
@@ -291,11 +539,40 @@ class MiningService:
                 reason = "untracked"
         refreshed = served is None
         if refreshed:
-            served = self._refresh(min_count)
+            served = self._refresh_blocking(min_count)
+        live = self._refresh_job is not None
+        if cert is None:  # exact answer (tracked walk or fresh refresh)
+            cert = ErrorCertificate(0, min_count, 0, self._churn, live)
         return ServeResult(itemsets=served, min_count=min_count,
                            n_transactions=n, refreshed=refreshed,
                            stale_reason=reason,
-                           seconds=time.perf_counter() - t0)
+                           seconds=time.perf_counter() - t0,
+                           certificate=cert, refresh_in_flight=live)
+
+    def _serve_approx(self, min_count: int, n: int):
+        """Bounded-staleness answer: current counts, skipping untracked
+        candidates, plus the certificate bounding both kinds of error.
+        Kicks a background refresh whenever the exact path would have
+        escaped, so served answers converge back to exact."""
+        self._drain_deltas(block=False)
+        served, skipped = self._serve_stale(min_count)
+        undrained = self._undrained()
+        miss = min_count + undrained
+        if skipped:
+            miss = max(miss,
+                       self._track_count_ref + self._ingested_since_refresh)
+        if self._refresh_job is None and (
+                skipped or self._churn > self.staleness * n):
+            svc_count = max(1, int(np.ceil(self.min_support * n)))
+            self._start_refresh(min(min_count, svc_count))
+            self._pump_refresh(block=False)
+        cert = ErrorCertificate(
+            max_drift=undrained, miss_bound=miss, undrained=undrained,
+            churn=self._churn, refresh_in_flight=self._refresh_job is not None)
+        reason = "stale" if (skipped or undrained) else None
+        if reason == "stale":
+            self.stale_served += 1
+        return served, cert, reason
 
     def _serve_from_tracked(self, min_count: int) -> Optional[Dict[Itemset, int]]:
         """Walk the Apriori lattice from the delta-maintained counts; None if
@@ -329,74 +606,140 @@ class MiningService:
             k += 1
         return result
 
-    # -- refresh -------------------------------------------------------------
-    def _refresh(self, min_count: int) -> Dict[Itemset, int]:
-        """Full re-mine of the current window through the resident runner,
-        rebuilding the tracked lattice (negative border included).
+    def _serve_stale(self, min_count: int):
+        """The approximate walk: like ``_serve_from_tracked`` but *skips*
+        untracked candidates instead of escaping — every skip is counted so
+        the certificate can widen ``miss_bound`` accordingly.  L1 comes from
+        the exact histogram (unmapped frequent items included), so level 1
+        is always exact."""
+        l1_raw = np.nonzero(self._hist >= min_count)[0]
+        result: Dict[Itemset, int] = {
+            (int(r),): int(self._hist[r]) for r in l1_raw}
+        dense = self._lookup[np.minimum(l1_raw, len(self._lookup) - 1)]
+        skipped = int((dense < 0).sum())  # unmapped items: supersets unseen
+        level = dense[dense >= 0].astype(np.int32).reshape(-1, 1)
+        k = 2
+        while level.size and k <= self.max_k:
+            cand = apriori_gen_matrix(level)
+            if cand.size == 0:
+                break
+            tl = self._levels.get(k)
+            if tl is None or tl.cand.size == 0:
+                skipped += int(cand.shape[0])
+                break
+            rows = tl.rows_of(cand)
+            tracked = rows >= 0
+            skipped += int((~tracked).sum())
+            counts = np.zeros((cand.shape[0],), np.int64)
+            counts[tracked] = tl.counts[rows[tracked]]
+            keep = tracked & (counts >= min_count)
+            level = cand[keep]
+            for row, c in zip(level, counts[keep]):
+                result[tuple(int(self._item_map[i]) for i in row)] = int(c)
+            k += 1
+        return result, skipped
 
-        The lattice is mined at the *margin* threshold
-        ``ceil(margin * min_count)`` — a slack band below the serving
-        threshold — so support-boundary flicker (items and itemsets
-        oscillating around ``min_count`` as the window slides) stays inside
-        the tracked lattice instead of forcing an "untracked" refresh per
-        query.  Counts are exact at any threshold, so the *served* result
-        (filtered at the true ``min_count``) is the batch miner's result by
-        construction: same Job1, same dense remap, same generation closure
-        over frequent items, same counting jobs, then a final exact
-        threshold.  The margin is purely a refresh-rate knob.
+    # -- refresh: cooperative state machine ----------------------------------
+    def refresh_async(self, min_support: Optional[float] = None) -> bool:
+        """Start (or advance) a background lattice refresh; never blocks.
+        Returns True while a refresh remains in flight after the call."""
+        if self._window_n == 0:
+            return False
+        ms = self.min_support if min_support is None else float(min_support)
+        if self._refresh_job is None:
+            self._start_refresh(max(1, int(np.ceil(ms * self._window_n))))
+        self._pump_refresh(block=False)
+        return self._refresh_job is not None
+
+    def _start_refresh(self, min_count: int) -> None:
+        job = {
+            "min_count": int(min_count),
+            "track_count": max(1, int(np.ceil(self.margin * min_count))),
+            "log": [],       # (sign, padded) blocks applied mid-refresh
+            "waiting": None,  # the handle the generator is parked on
+        }
+        job["gen"] = self._refresh_gen(job)
+        self._refresh_job = job
+
+    def _abort_refresh(self) -> None:
+        job, self._refresh_job = self._refresh_job, None
+        if job is not None:
+            job["gen"].close()
+
+    def _pump_refresh(self, block: bool = False) -> bool:
+        """Advance the in-flight refresh: one unit per non-blocking call
+        (bounding ingest/query latency), or run to handoff when blocking.
+        Returns True iff the refresh completed (handoff done) in this call.
+        """
+        job = self._refresh_job
+        if job is None:
+            return False
+        gen = job["gen"]
+        while True:
+            waiting = job["waiting"]
+            if waiting is not None and not block and not waiting.poll():
+                return False
+            job["waiting"] = None
+            try:
+                job["waiting"] = next(gen)
+            except StopIteration:
+                self._handoff(job)
+                return True
+            except BaseException:
+                self._refresh_job = None
+                raise
+            if not block:
+                return False
+
+    def _refresh_gen(self, job: dict):
+        """The refresh state machine: yields ``None`` after a bounded unit
+        of host/device work, or a pending wave handle to park on.  Runs over
+        the *snapshot* window taken at start; blocks applied after the
+        snapshot land in ``job["log"]`` and are replayed at handoff.
         """
         runner = self.runner
-        track_count = max(1, int(np.ceil(self.margin * min_count)))
-        # Outstanding deltas target the lattice being discarded; place()
-        # below abandons their device handles.
-        self._pending_deltas.clear()
-        window = self.window()
-        runner.ingest(window)
+        track_count = job["track_count"]
+        # Unit 1: join outstanding old-lattice deltas (keeps stale serving
+        # tight) and take the window snapshot + host ingest pass.
+        self._drain_deltas()
+        hist_snap = self._hist.copy()
+        runner.ingest(self.window())
+        yield None
+        # Unit 2: device Job1 + placement.  The drain directly before
+        # place() is load-bearing: place() abandons every outstanding engine
+        # handle, so any delta dispatched since unit 1 must be joined first
+        # (no yield may separate the drain from the place).
         hist, _ = runner.job1()
-        self._check_hist(hist)
+        self._check_hist(hist, hist_snap)
         item_map = np.nonzero(hist >= track_count)[0].astype(np.int64)
+        job["item_map"] = item_map
+        self._drain_deltas()
         runner.place(item_map)
-        result: Dict[Itemset, int] = {
-            (int(it),): int(hist[it]) for it in item_map
-            if hist[it] >= min_count}
+        yield None
         level = np.arange(len(item_map), dtype=np.int32).reshape(-1, 1)
         if self.device_loop and level.size:
-            levels, freq = self._refresh_ladder(level, track_count)
-            for s, c in freq.items():
-                if c >= min_count:
-                    result[tuple(int(item_map[i]) for i in s)] = int(c)
+            levels = yield from self._ladder_gen(level, track_count)
         else:
             levels = {}
             k = 2
             cand = apriori_gen_matrix(level)
             while cand.size and k <= self.max_k:
-                counts, _prof = runner.count(CountJob(
+                pend = runner.count_async(CountJob(
                     k=k, cand=cand, min_count=track_count, level=level))
+                yield pend
+                counts, _prof = pend.result()
                 levels[k] = _TrackedLevel(cand, counts)
-                keep = counts >= track_count
-                level = cand[keep]
-                for row, c in zip(level, counts[keep]):
-                    if c >= min_count:
-                        result[tuple(int(item_map[i]) for i in row)] = int(c)
+                level = cand[counts >= track_count]
                 cand = apriori_gen_matrix(level)
                 k += 1
-        self._item_map = item_map
-        lookup = np.full((len(hist) + 1,), -1, np.int64)
-        if len(item_map):
-            lookup[item_map] = np.arange(len(item_map), dtype=np.int64)
-        self._lookup = lookup
-        self._levels = levels
-        self._refreshed_once = True
-        self._churn = 0
-        self.refreshes += 1
-        return result
+        job["levels"] = levels
 
-    def _refresh_ladder(self, level: np.ndarray, track_count: int):
+    def _ladder_gen(self, level: np.ndarray, track_count: int):
         """Ladder-mode refresh: the fused ``LevelLadder`` (optionally with
-        on-device trimming) mines the margin-frequent lattice in one dispatch
-        per level; the negative border (candidates the ladder pruned) is then
-        counted through the wave pipeline so the tracked lattice is complete.
-        Counts are exact either way, so the two refresh modes are
+        on-device trimming) mines the margin-frequent lattice one level per
+        unit; the negative border (candidates the ladder pruned) is then
+        counted through the wave pipeline so the tracked lattice is
+        complete.  Counts are exact either way, so the two refresh modes are
         bit-identical."""
         from repro.core.itemsets import _rows_member
         from repro.core.runtime import device_loop as _dl
@@ -406,6 +749,7 @@ class MiningService:
                                      start_k=2, max_k=self.max_k,
                                      trim=self.trim):
             freq_by_k[prof.k] = freq
+            yield None
         # Border waves ride the async FIFO back-to-back: wave k+1's host-side
         # generation overlaps wave k's device count.
         waves = []
@@ -427,23 +771,77 @@ class MiningService:
             prev = fmat
             k += 1
         levels: Dict[int, _TrackedLevel] = {}
-        all_freq: Dict[Itemset, int] = {}
         for k, cand, member, freq, pend in waves:
             counts = np.zeros((cand.shape[0],), np.int64)
             for i in np.flatnonzero(member):
                 counts[i] = freq[tuple(int(x) for x in cand[i])]
             if pend is not None:
+                yield pend
                 bcounts, _prof = pend.result()
                 counts[~member] = bcounts
             levels[k] = _TrackedLevel(cand, counts)
-            all_freq.update(freq)
-        return levels, all_freq
+        return levels
 
-    def _check_hist(self, hist: np.ndarray) -> None:
-        """Self-check: the device Job1 over the window must equal the
-        delta-maintained histogram — the additivity invariant the whole
+    def _handoff(self, job: dict) -> None:
+        """Install the freshly mined lattice and replay everything that
+        arrived while the refresh was in flight — old and new lattices never
+        mix: old-lattice delta handles are discarded whole, and each logged
+        block reaches the new lattice through a fresh signed dispatch over
+        the new item map."""
+        item_map = job["item_map"]
+        self._item_map = item_map
+        lookup = np.full((len(self._hist) + 1,), -1, np.int64)
+        if len(item_map):
+            lookup[item_map] = np.arange(len(item_map), dtype=np.int64)
+        self._lookup = lookup
+        self._levels = job["levels"]
+        self._track_count_ref = int(job["track_count"])
+        self._pending_deltas = []  # old-lattice handles: discarded whole
+        self._refresh_job = None
+        self._churn = 0
+        self._ingested_since_refresh = 0
+        self._evicted_since_refresh = 0
+        for sign, padded in job["log"]:
+            n = padded.shape[0]
+            self._churn += n
+            if sign > 0:
+                self._ingested_since_refresh += n
+            else:
+                self._evicted_since_refresh += n
+            self._dispatch_deltas(padded, sign)
+        self._refreshed_once = True
+        self._drained_since_compact = 0
+        self.refreshes += 1
+
+    def _refresh_blocking(self, min_count: int) -> Dict[Itemset, int]:
+        """Exact escape path: ride a compatible in-flight refresh to its
+        handoff, or run a fresh one to completion, then serve from the new
+        lattice."""
+        job = self._refresh_job
+        if job is not None and job["track_count"] <= min_count:
+            self._pump_refresh(block=True)
+            self._drain_deltas()
+            served = self._serve_from_tracked(min_count)
+            if served is not None:
+                return served
+            # Mid-refresh churn outran the ridden lattice: mine fresh below.
+        self._abort_refresh()
+        self._start_refresh(min_count)
+        self._pump_refresh(block=True)
+        self._drain_deltas()
+        served = self._serve_from_tracked(min_count)
+        if served is None:  # cannot happen: no churn since the handoff
+            raise AssertionError(
+                "freshly refreshed lattice failed to serve its own threshold")
+        return served
+
+    def _check_hist(self, hist: np.ndarray,
+                    ref: Optional[np.ndarray] = None) -> None:
+        """Self-check: the device Job1 over the (snapshot) window must equal
+        the delta-maintained histogram — the additivity invariant the whole
         serving path rests on."""
-        h, m = self._hist, len(hist)
+        h = self._hist if ref is None else ref
+        m = len(hist)
         if not (np.array_equal(h[:m], hist[:m])
                 and not h[m:].any() and not hist[m:].any()):
             raise AssertionError(
@@ -458,9 +856,15 @@ class MiningService:
             "refreshes": self.refreshes,
             "delta_jobs": self.delta_jobs,
             "pending_deltas": len(self._pending_deltas),
+            "undrained": self._undrained(),
             "total_ingested": self.total_ingested,
             "total_evicted": self.total_evicted,
             "tracked_levels": sorted(self._levels),
             "tracked_candidates": int(sum(
                 tl.cand.shape[0] for tl in self._levels.values())),
+            "track_count_ref": self._track_count_ref,
+            "stale_served": self.stale_served,
+            "compactions": self.compactions,
+            "compacted_rows": self.compacted_rows,
+            "refresh_in_flight": self._refresh_job is not None,
         }

@@ -897,3 +897,40 @@ def test_dataset_cache_eviction_while_in_use():
     rebuilt = cache.get_or_build("a", build)    # B re-places the same digest
     assert rebuilt is not held                  # fresh build, not the old ref
     assert np.array_equal(rebuilt, held)        # ... but identical content
+
+
+def test_dataset_cache_stats_coherent_under_hammer():
+    """Stats stay coherent under a concurrent hit/miss storm: every call is
+    classified exactly once (hits + misses == calls) and LRU eviction keeps
+    the entry count bounded, with more keys in play than cache slots so
+    evict/rebuild churn runs the whole time."""
+    import threading
+
+    from repro.core.runtime import EncodedDatasetCache
+
+    n_threads, n_iter, n_keys = 8, 200, 6
+    cache = EncodedDatasetCache(max_entries=4)
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for i in range(n_iter):
+                key = (tid + i) % n_keys
+                value = cache.get_or_build(key, lambda k=key: ("enc", k))
+                assert value == ("enc", key)
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    stats = cache.stats()
+    assert stats["hits"] + stats["misses"] == n_threads * n_iter
+    assert stats["hits"] > 0 and stats["misses"] > 0
+    assert stats["entries"] <= 4

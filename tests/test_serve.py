@@ -3,6 +3,8 @@ mid-stream parity anchor — any seeded ingest/evict sequence must serve
 queries bit-identical (itemsets AND supports) to a fresh batch mine over
 the exact current window, across stores and backends."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -11,7 +13,12 @@ from repro.core.runtime import JaxRunner, ShardedRunner, SimRunner
 from repro.core.stores import ARRAY_STORES
 from repro.data import ArrivalBatch, basket_stream
 from repro.launch.mesh import compat_make_mesh
-from repro.serve import IngestReport, MiningService, ServeResult
+from repro.serve import (
+    ErrorCertificate,
+    IngestReport,
+    MiningService,
+    ServeResult,
+)
 
 
 def _batches(rng, n_batches, size, n_items=36, max_len=7):
@@ -28,6 +35,29 @@ def _batches(rng, n_batches, size, n_items=36, max_len=7):
 def _oracle(window, min_support, max_k):
     return FrequentItemsetMiner(min_support=min_support, store="perfect_hash",
                                 max_k=max_k).mine(window).itemsets
+
+
+def _support(window, itemset):
+    """Exact support of one itemset over the window (ground truth)."""
+    s = set(itemset)
+    return sum(1 for t in window if s <= set(t))
+
+
+def _validate_certificate(window, ms, max_k, res):
+    """Pin a (possibly stale) answer against the exact recount: every
+    reported support within max_drift of truth, every missed frequent
+    itemset below miss_bound, and exactness whenever the bound says so."""
+    cert = res.certificate
+    assert isinstance(cert, ErrorCertificate)
+    oracle = _oracle(window, ms, max_k)
+    for itemset, c in res.itemsets.items():
+        drift = abs(c - _support(window, itemset))
+        assert drift <= cert.max_drift, (itemset, drift, cert)
+    for itemset, exact in oracle.items():
+        if itemset not in res.itemsets:
+            assert exact < cert.miss_bound, (itemset, exact, cert)
+    if cert.is_exact(res.min_count):
+        assert res.itemsets == oracle
 
 
 # -- parity anchor -----------------------------------------------------------
@@ -176,6 +206,218 @@ def test_runner_and_store_args_conflict():
                       store="perfect_hash")
 
 
+# -- per-basket eviction -----------------------------------------------------
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+def test_per_basket_eviction_parity_across_stores(store):
+    """Basket-granular eviction (overflow + explicit evict) keeps every
+    query bit-identical to a batch mine of the exact current window."""
+    rng = np.random.default_rng((hash(store) + 1) % (2**32))
+    svc = MiningService(min_support=0.08, store=store, n_slots=4,
+                        slot_size=24, eviction="basket", staleness=0.5,
+                        max_k=5)
+    for batch in _batches(rng, 5, 30, n_items=20, max_len=6):
+        svc.ingest(batch)            # overflow leaves per basket
+        svc.evict(3)                 # plus explicit sub-slot evictions
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.08, 5), store
+    assert svc.window_size <= 4 * 24
+    svc.close()
+
+
+def test_per_basket_eviction_sharded():
+    runner = ShardedRunner(store="bitmap",
+                           mesh=compat_make_mesh((1,), ("data",)))
+    rng = np.random.default_rng(21)
+    svc = MiningService(min_support=0.08, runner=runner, n_slots=3,
+                        slot_size=24, eviction="basket", max_k=5)
+    for batch in _batches(rng, 4, 28, n_items=20, max_len=6):
+        svc.ingest(batch)
+        svc.evict(2)
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.08, 5)
+    svc.close()
+
+
+def test_per_basket_eviction_ladder_refresh():
+    svc = MiningService(min_support=0.08, store="sorted_prefix", n_slots=3,
+                        slot_size=24, eviction="basket", max_k=5,
+                        device_loop=True, trim=True)
+    rng = np.random.default_rng(22)
+    for batch in _batches(rng, 4, 28, n_items=20, max_len=6):
+        svc.ingest(batch)
+        svc.evict(2)
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.08, 5)
+    svc.close()
+
+
+def test_evict_single_basket_is_one_row_delta():
+    """evict(1) uncounts a one-row block — the finest delta granularity —
+    and the delta-served answer still matches the batch miner."""
+    svc = MiningService(min_support=0.25, store="perfect_hash", n_slots=2,
+                        slot_size=8, eviction="basket")
+    svc.ingest([[0, 1], [1, 2], [0, 2], [0, 1, 2]] * 2)
+    svc.query()
+    jobs0 = svc.delta_jobs
+    delta_served = 0
+    for _ in range(3):
+        rep = svc.evict(1)
+        assert rep.n_evicted == 1 and rep.n_ingested == 0
+        res = svc.query()
+        assert res.itemsets == _oracle(svc.window(), 0.25, 16)
+        delta_served += 0 if res.refreshed else 1
+    assert svc.delta_jobs > jobs0, "evictions dispatched no signed deltas"
+    assert delta_served > 0, "every post-evict query escaped to a refresh"
+    svc.close()
+
+
+def test_evict_to_empty_window_then_refill():
+    """Evicting the only slot empties the window exactly; refilling recovers
+    full parity."""
+    svc = MiningService(min_support=0.3, store="packed_bitmap", n_slots=3,
+                        slot_size=4, eviction="basket")
+    svc.ingest([[1, 2], [2, 3], [1, 3], [1, 2, 3]])
+    svc.query()
+    rep = svc.evict(4)
+    assert rep.n_evicted == 4 and svc.window_size == 0
+    res = svc.query()
+    assert res.itemsets == {} and res.n_transactions == 0
+    svc.ingest([[4, 5], [4, 5], [5, 6], [4, 5, 6]])
+    res = svc.query()
+    assert res.itemsets == _oracle(svc.window(), 0.3, 16)
+    svc.close()
+
+
+# -- delta-path edge cases ---------------------------------------------------
+def test_all_empty_transaction_blocks():
+    """A whole slot of empty baskets is an exact no-op on every count."""
+    svc = MiningService(min_support=0.3, store="bitmap", n_slots=4,
+                        slot_size=8)
+    svc.ingest([[1, 2], [2, 3], [1, 2, 3], [1, 3]] * 2)
+    svc.query()
+    svc.ingest([[]] * 8)
+    res = svc.query()
+    assert res.itemsets == _oracle(svc.window(), 0.3, 16)
+    assert svc.window_size == 16
+    svc.close()
+
+
+def test_block_of_entirely_new_items():
+    """A block whose items all fall outside the tracked item map grows the
+    raw histogram mid-stream; the stale path certifies around it and the
+    exact path escapes and refreshes."""
+    svc = MiningService(min_support=0.25, store="perfect_hash", n_slots=4,
+                        slot_size=8, staleness=1.0)
+    svc.ingest([[0, 1], [1, 2], [0, 2], [0, 1, 2]] * 2)
+    svc.query()
+    svc.ingest([[100, 101], [101, 102], [100, 102], [100, 101, 102]] * 2)
+    stale = svc.query(staleness=2.0)
+    assert not stale.refreshed
+    _validate_certificate(svc.window(), 0.25, 16, stale)
+    res = svc.query()
+    assert res.refreshed and res.stale_reason == "untracked"
+    assert res.itemsets == _oracle(svc.window(), 0.25, 16)
+    svc.close()
+
+
+# -- bounded-staleness serving ----------------------------------------------
+def test_stale_serving_certificates_validate_against_recount():
+    """Every staleness-budget answer's certificate holds against the exact
+    ground-truth recount of the window it was served over."""
+    rng = np.random.default_rng(11)
+    svc = MiningService(min_support=0.08, store="perfect_hash", n_slots=8,
+                        slot_size=32, staleness=0.3, max_k=6)
+    svc.ingest([t for b in _batches(rng, 8, 32, n_items=24) for t in b])
+    svc.query()                      # cold refresh builds the lattice
+    r0 = svc.refreshes
+    saw_inflight = saw_stale = False
+    for batch in _batches(rng, 6, 32, n_items=24):
+        svc.ingest(batch)
+        res = svc.query(staleness=4.0)
+        assert not res.refreshed, "staleness budget still blocked a query"
+        _validate_certificate(svc.window(), 0.08, 6, res)
+        saw_inflight = saw_inflight or res.refresh_in_flight
+        saw_stale = saw_stale or res.stale_reason == "stale"
+    assert saw_inflight, "drift never kicked a background refresh"
+    # Drive the in-flight refresh to its handoff without blocking queries.
+    for _ in range(2000):
+        if not svc.stats()["refresh_in_flight"]:
+            break
+        svc.refresh_async()
+        time.sleep(0.001)
+    assert not svc.stats()["refresh_in_flight"]
+    assert svc.refreshes > r0, "background refresh never handed off"
+    res = svc.query()                # exact after the background handoff
+    assert res.itemsets == _oracle(svc.window(), 0.08, 6)
+    svc.close()
+
+
+def test_stale_query_exact_when_bound_is_zero():
+    """With zero churn since refresh the certificate certifies exactness —
+    and the answer really is the oracle's."""
+    rng = np.random.default_rng(13)
+    svc = MiningService(min_support=0.08, store="perfect_hash", n_slots=6,
+                        slot_size=32, max_k=6)
+    svc.ingest([t for b in _batches(rng, 6, 32, n_items=24) for t in b])
+    svc.query()
+    res = svc.query(staleness=1.0)
+    cert = res.certificate
+    assert cert.max_drift == 0 and cert.miss_bound == res.min_count
+    assert cert.is_exact(res.min_count)
+    assert res.stale_reason is None and not res.refreshed
+    assert res.itemsets == _oracle(svc.window(), 0.08, 6)
+    svc.close()
+
+
+def test_below_track_threshold_refreshes_at_queried_threshold():
+    """A query below the margin-lowered track threshold must never walk (or
+    approximately serve) the provably incomplete lattice — it refreshes at
+    the queried threshold, on the exact AND the stale path."""
+    rng = np.random.default_rng(15)
+    svc = MiningService(min_support=0.08, store="perfect_hash", n_slots=8,
+                        slot_size=32, margin=0.8, max_k=6)
+    svc.ingest([t for b in _batches(rng, 8, 32, n_items=24) for t in b])
+    svc.query()                      # lattice tracked at 0.8 * ceil(.08 * n)
+    res = svc.query(min_support=0.04)
+    assert res.refreshed and res.stale_reason == "below_track"
+    assert res.itemsets == _oracle(svc.window(), 0.04, 6)
+    # The refresh above re-tracked at the lower threshold; go lower still so
+    # the stale path hits the same guard.
+    res = svc.query(min_support=0.02, staleness=10.0)
+    assert res.refreshed and res.stale_reason == "below_track"
+    assert res.itemsets == _oracle(svc.window(), 0.02, 6)
+    svc.close()
+
+
+# -- tracked-lattice compaction ----------------------------------------------
+def test_compaction_prunes_drained_rows_and_preserves_parity():
+    """After item churn drains tracked rows to zero support, compaction
+    removes them (and their orphaned border) without changing any answer."""
+    tails = [[3, 4, 5], [4, 5, 6], [3, 5, 6], [3, 4, 6]]
+    first = [[0, 1, 2] + tails[i % 4] for i in range(16)]
+    # Window cap == 16 baskets, so the second ingest evicts the first whole.
+    svc = MiningService(min_support=0.2, store="perfect_hash", n_slots=1,
+                        slot_size=16, eviction="basket", staleness=2.1,
+                        max_k=5, compact_churn=0.1)
+    svc.ingest(first)
+    svc.query()
+    pre = svc.stats()["tracked_candidates"]
+    assert pre > 0
+    # Replace every {0,1,2}-carrying basket with its tail: supports of all
+    # other itemsets are unchanged, so no new itemset can cross the track
+    # threshold — the only lattice change is {0,1,2} draining to zero.
+    svc.ingest([tails[i % 4] for i in range(16)])
+    res = svc.query()                # drains -> compacts -> serves
+    assert res.itemsets == _oracle(svc.window(), 0.2, 5)
+    st = svc.stats()
+    assert st["compactions"] >= 1, "drain threshold never compacted"
+    assert st["compacted_rows"] > 0
+    assert st["tracked_candidates"] < pre
+    res = svc.query()                # parity again on the compacted lattice
+    assert res.itemsets == _oracle(svc.window(), 0.2, 5)
+    svc.close()
+
+
 # -- basket stream -----------------------------------------------------------
 def test_basket_stream_seeded_and_reproducible():
     a = list(basket_stream("T10I4D100K", batch_size=32, scale=0.002, seed=4))
@@ -196,6 +438,35 @@ def test_basket_stream_repeat_and_cap():
                                 seed=0, repeat=True,
                                 max_batches=n_one_epoch + 3))
     assert len(capped) == n_one_epoch + 3
+
+
+def test_stream_replay_invariant_across_batch_sizes():
+    """Same seed => same basket order AND same per-basket timestamps no
+    matter how the stream is cut into batches — including past the first
+    epoch (the old shared-RNG draws made epoch 2's shuffle depend on how
+    many batch-size draws epoch 1 consumed)."""
+    n_epoch = sum(len(ab) for ab in
+                  basket_stream("T10I4D100K", batch_size=32, scale=0.002,
+                                seed=7))
+
+    def flat(bs, n_batches):
+        txs, ts = [], []
+        for ab in basket_stream("T10I4D100K", batch_size=bs, scale=0.002,
+                                seed=7, repeat=True, max_batches=n_batches):
+            assert ab.t_arrivals is not None
+            assert len(ab.t_arrivals) == len(ab.transactions)
+            assert ab.t_arrival == ab.t_arrivals[-1]
+            txs.extend(ab.transactions)
+            ts.extend(float(t) for t in ab.t_arrivals)
+        return txs, ts
+
+    txs_a, ts_a = flat(16, 40)
+    txs_b, ts_b = flat(48, 14)
+    k = min(len(txs_a), len(txs_b))
+    assert k > n_epoch + 10, "comparison must reach into epoch 2"
+    assert txs_a[:k] == txs_b[:k]
+    assert ts_a[:k] == ts_b[:k]      # bit-identical, not just close
+    assert all(x < y for x, y in zip(ts_a, ts_a[1:]))
 
 
 def test_stream_feeds_service():
