@@ -1,0 +1,87 @@
+"""Out-of-core streaming benchmark: chunked vs fully-resident mining.
+
+Writes the scaled dataset to a ``.dat`` file, then mines it twice over —
+once fully resident (``padded_from_transactions`` ingest, the baseline)
+and once streamed through ``ChunkedDatasetReader`` at a sweep of split
+sizes (N/4, N/16, N/64 transactions per chunk).  The rows quantify what
+the bounded-memory path costs: per-mine wall time, sustained txn/s, and
+the peak chunk footprint each split size guarantees (arXiv:1701.05982's
+lesson that split size is a first-order knob, measured here).
+
+The suite is also a hard parity certificate: every chunked sweep point's
+itemsets AND supports are asserted bit-identical to the resident mine
+(support-count additivity over disjoint transaction blocks), and the
+``outofcore/parity`` row recording that check is emitted only when it
+holds — a mismatch raises and fails the whole benchmark run.
+
+  PYTHONPATH=src python -m benchmarks.run outofcore    # BENCH_outofcore.json
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if not __package__ and REPO_ROOT not in sys.path:  # `python benchmarks/...`
+    sys.path[:0] = [REPO_ROOT, os.path.join(REPO_ROOT, "src")]
+
+from benchmarks.common import SCALE, row, timed
+
+DATASET = "T10I4D100K"
+SUPPORT = 0.015
+STORE = "perfect_hash"
+MAX_K = 6
+SPLITS = (4, 16, 64)      # target chunk counts for the split-size sweep
+
+
+def run() -> list:
+    from repro.core.miner import FrequentItemsetMiner
+    from repro.data import ChunkedDatasetReader, get_dataset, write_dat
+
+    db = get_dataset(DATASET, scale=SCALE, seed=0)
+    n = len(db)
+    lines = [f"# outofcore: {DATASET} scale={SCALE} n={n} "
+             f"support={SUPPORT} store={STORE}"]
+
+    def miner():
+        return FrequentItemsetMiner(min_support=SUPPORT, store=STORE,
+                                    max_k=MAX_K)
+
+    ref, ref_s = timed(lambda: miner().mine(db))
+    lines.append(row("outofcore/in_memory", ref_s * 1e6,
+                     f"txn_s={n / ref_s:.0f};itemsets={len(ref.itemsets)};"
+                     f"n={n}"))
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "db.dat")
+        write_dat(path, db)
+        checked = []
+        for target in SPLITS:
+            size = max(1, -(-n // target))
+            reader = ChunkedDatasetReader(path, chunk_transactions=size)
+            res, s = timed(lambda: miner().mine(reader))
+            # The hard parity gate: a single drifted support fails the run.
+            assert res.itemsets == ref.itemsets, (
+                f"out-of-core parity violation at {reader.describe()}")
+            assert res.min_count == ref.min_count
+            assert all(p.chunks == reader.n_chunks for p in res.levels)
+            checked.append(reader.n_chunks)
+            peak_kb = size * reader.width * 4 / 1024
+            lines.append(row(
+                f"outofcore/chunked/c{reader.n_chunks}", s * 1e6,
+                f"txn_s={n / s:.0f};chunk_txns={size};"
+                f"peak_chunk_kb={peak_kb:.0f};vs_mem={s / ref_s:.2f}x"))
+        lines.append(row(
+            "outofcore/parity", 0.0,
+            f"parity=ok;sweep_chunks={'/'.join(map(str, checked))};"
+            f"itemsets={len(ref.itemsets)};store={STORE}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line)

@@ -167,6 +167,7 @@ def main() -> None:
         bench_iterations,
         bench_mappers,
         bench_min_support,
+        bench_outofcore,
         bench_paper,
         bench_runtime,
         bench_serve,
@@ -191,6 +192,9 @@ def main() -> None:
         # Streaming service: delta-update ingest vs full-window recount —
         # the serving layer's throughput/latency certificate.
         "serve": bench_serve.run,
+        # Out-of-core chunked streaming vs fully-resident ingest — the
+        # split-size sweep doubling as a hard parity certificate.
+        "outofcore": bench_outofcore.run,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

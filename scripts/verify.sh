@@ -198,10 +198,43 @@ print(f"hardening smoke OK: basket-capped window ({exact.n_transactions} <= "
       f"exact query bit-identical ({st['refreshes']} refreshes)")
 PY
 
+echo "== smoke: out-of-core chunked streaming (bounded-memory parity) =="
+python - <<'PY'
+import os
+import tempfile
+import numpy as np
+from repro.core import FrequentItemsetMiner, brute_force_frequent
+from repro.data import ChunkedDatasetReader, get_dataset, write_dat
+
+db = get_dataset("T10I4D100K", scale=0.002, seed=11)
+with tempfile.TemporaryDirectory() as d:
+    path = os.path.join(d, "db.dat.gz")
+    write_dat(path, db)
+    # A budget of ~1/5 of the padded matrix: the reader must stream the
+    # file in >= 4 bounded chunks, never holding the whole DB on host.
+    probe = ChunkedDatasetReader(path)
+    budget = (len(db) * probe.width * 4) // 5
+    reader = ChunkedDatasetReader(path, memory_budget_bytes=budget)
+    assert reader.n_chunks >= 4, reader.describe()
+    res = FrequentItemsetMiner(min_support=0.05, store="packed_bitmap",
+                               max_k=6).mine(reader)
+    mem = FrequentItemsetMiner(min_support=0.05, store="packed_bitmap",
+                               max_k=6).mine(db)
+    oracle = brute_force_frequent(db, res.min_count)
+    assert res.itemsets == mem.itemsets == oracle, "chunked mine diverged"
+    assert res.n_transactions == len(db)
+    assert all(p.chunks == reader.n_chunks for p in res.levels)
+print(f"out-of-core smoke OK: {reader.describe()} == in-memory == brute "
+      f"force ({len(res.itemsets)} itemsets, budget {budget} bytes)")
+PY
+
 echo "== smoke: stores_jax counting wave (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run stores_jax
 
 echo "== smoke: runtime dispatch + Job1 (BENCH_SCALE=0.01) =="
 BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run runtime
+
+echo "== smoke: out-of-core split-size sweep (BENCH_SCALE=0.01) =="
+BENCH_SCALE="${BENCH_SCALE:-0.01}" python -m benchmarks.run outofcore
 
 echo "verify OK"

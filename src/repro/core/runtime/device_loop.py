@@ -524,6 +524,11 @@ def ladder(runner, level, min_count: int, start_k: int, max_k: int,
         raise ValueError(
             "device_loop requires an engine-backed runner (JaxRunner/"
             "ShardedRunner); SimRunner keeps the host loop as the oracle")
+    if getattr(runner, "_reader", None) is not None:
+        raise ValueError(
+            "device_loop=True needs the DB resident on device; out-of-core "
+            "chunked ingestion streams it instead — mine with "
+            "device_loop=False (the host SPC loop)")
     lad = LevelLadder(engine, min_count, trim=trim,
                       fault_plan=getattr(runner, "fault_plan", None))
     yield from lad.run(np.asarray(level, dtype=np.int32), start_k, max_k)

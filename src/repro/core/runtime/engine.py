@@ -69,6 +69,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.stores import ARRAY_STORES, EncodedDB, pad_candidates
 from repro.core.stores.base import ITEM_PAD
+from repro.distributed.ctx import fetch_global
 
 if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
@@ -323,9 +324,14 @@ class MapReduceEngine:
         (and no replicated full-wave encode) happens in between."""
         cand_p = pad_candidates(chunk, self._enc.f_pad,
                                 shards=self.n_cand_shards)
-        cand_dev = jnp.asarray(cand_p, dtype=jnp.int32)
+        cand_np = np.ascontiguousarray(cand_p, dtype=np.int32)
         if self._cand_in_sharding is not None:
-            cand_dev = jax.device_put(cand_dev, self._cand_in_sharding)
+            # device_put straight from host memory: a committed single-device
+            # array cannot be re-put onto a process-spanning sharding, numpy
+            # can (every process holds the identical full wave).
+            cand_dev = jax.device_put(cand_np, self._cand_in_sharding)
+        else:
+            cand_dev = jnp.asarray(cand_np)
         return self._encode_jit(cand_dev)
 
     def _dispatch_count(self, cands: dict):
@@ -353,9 +359,14 @@ class MapReduceEngine:
             self._force_oldest()
 
     def _force_oldest(self) -> None:
-        """Fetch the oldest outstanding chunk result to host (blocking)."""
+        """Fetch the oldest outstanding chunk result to host (blocking).
+
+        Routed through ``fetch_global`` so a cand-sharded result living on a
+        process-spanning mesh resolves too (the allgather it needs is a
+        collective, which is safe exactly because this queue is strict FIFO:
+        every process fetches the same results in the same order)."""
         pending, slot, dev, c = self._queue.popleft()
-        counts = np.asarray(jax.device_get(dev))
+        counts = fetch_global(dev)
         pending._parts[slot] = counts[:c].astype(np.int64)
 
     def drain_ready(self) -> int:
@@ -577,7 +588,7 @@ class MapReduceEngine:
                     sharded, mesh=self.mesh,
                     in_specs=(P(self.data_axes),), out_specs=P()))
         hist = self._job1_jit[key](dev)
-        return np.asarray(jax.device_get(hist)).astype(np.int64)
+        return fetch_global(hist).astype(np.int64)
 
     @staticmethod
     def count_items(transactions, n_items: int) -> np.ndarray:

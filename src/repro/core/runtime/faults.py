@@ -39,6 +39,14 @@ Engine/runner fault kinds:
                   dispatch — the driver rebuilds an elastic mesh on the
                   surviving devices and resumes from its level checkpoint.
 
+``process_exit``  the *real* multi-host failure: at level-``k`` job
+                  dispatch, the worker whose ``jax.process_index()``
+                  matches ``process`` calls ``os._exit(137)`` — no cleanup,
+                  no exception, exactly a killed host.  The cluster
+                  supervisor (``launch.multihost``) detects the death,
+                  kills the survivors' hung collectives, and relaunches a
+                  smaller cluster that resumes from the shared checkpoint.
+
 Checkpoint fault kinds (consulted by ``distributed.checkpoint.save``):
 
 ``torn_write``    truncate tensor ``tensor`` of step ``step`` mid-write and
@@ -61,7 +69,8 @@ import numpy as np
 
 MAPPER_KINDS = ("crash", "hang", "corrupt")
 CHECKPOINT_KINDS = ("torn_write", "kill_write", "kill_commit", "bitrot")
-ALL_KINDS = MAPPER_KINDS + ("device_loss",) + CHECKPOINT_KINDS
+ALL_KINDS = (MAPPER_KINDS + ("device_loss", "process_exit")
+             + CHECKPOINT_KINDS)
 
 
 class MapperCrashError(RuntimeError):
@@ -97,6 +106,7 @@ class FaultSpec:
     times: int = 1                 # how many times this spec may fire
     delay: float = 0.25            # hang duration (seconds)
     lost: int = 1                  # devices lost (device_loss)
+    process: Optional[int] = None  # jax process index that dies (process_exit)
     step: Optional[int] = None     # checkpoint step (checkpoint kinds)
     tensor: int = 0                # tensor index within the snapshot
     seed: int = 0                  # corruption perturbation seed
@@ -131,6 +141,12 @@ def corrupt(k: Optional[int] = None, slot: Optional[int] = None,
 def device_loss(k: Optional[int] = None, lost: int = 1,
                 times: int = 1) -> FaultSpec:
     return FaultSpec("device_loss", k=k, lost=lost, times=times)
+
+
+def process_exit(k: Optional[int] = None, process: int = 0,
+                 times: int = 1) -> FaultSpec:
+    """Kill worker ``process`` (jax process index) at level-``k`` dispatch."""
+    return FaultSpec("process_exit", k=k, process=process, times=times)
 
 
 def torn_write(step: Optional[int] = None, tensor: int = 0) -> FaultSpec:
@@ -223,6 +239,12 @@ class FaultPlan:
     def device_loss(self, *, k: int) -> Optional[FaultSpec]:
         """Device-loss order at the dispatch of a level-k counting job."""
         return self._take(("device_loss",), k=k)
+
+    def process_exit(self, *, k: int, process: int) -> Optional[FaultSpec]:
+        """Process-death order at level-k dispatch, addressed by the
+        caller's own ``jax.process_index()`` — only the doomed worker's
+        consultation fires (each process holds its own plan copy)."""
+        return self._take(("process_exit",), k=k, process=process)
 
     def checkpoint_action(self, *, step: int, tensor: Optional[int] = None,
                           stage: str = "tensor") -> Optional[FaultSpec]:

@@ -75,6 +75,9 @@ class JobProfile:
     # 0 on the host-loop paths, which never resize the placed DB).
     n_pad: int = 0
     f_pad: int = 0
+    # Out-of-core telemetry: transaction chunks the job streamed through
+    # (ChunkedDatasetReader ingestion); 0 on the resident-DB paths.
+    chunks: int = 0
 
     @property
     def parallel_seconds(self) -> float:

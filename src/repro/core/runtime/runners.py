@@ -29,6 +29,17 @@ device counting.  ``ShardedRunner`` additionally takes ``cand_axes`` for the
 2-D work decomposition: transactions shard over ``data`` while each wave's
 candidate tensors shard over ``cand`` instead of being replicated.
 
+**Out-of-core ingestion**: the engine-backed runners also accept a
+``repro.data.ChunkedDatasetReader`` in ``ingest`` — nothing is made
+resident; Job1 sums per-chunk device histograms and every counting job
+streams the reader's chunks through the serving layer's
+``encode_block``/``count_block_async`` delta path, summing the per-chunk
+int64 count vectors (additive over disjoint blocks, hence bit-identical to
+the in-memory path).  Peak host memory stays bounded by one chunk times the
+dispatch-queue depth regardless of dataset size.  ``SimRunner`` rejects
+readers (its cost model needs the in-memory splits) and the fused
+``device_loop`` ladder rejects them too (it is defined by DB residency).
+
 Fault tolerance (``fault_plan=`` / ``retry=``, see ``runtime/faults.py``):
 ``SimRunner`` recovers from task failures the way Hadoop does — every mapper
 attempt is digest-checked and, on a crash or corrupted partial, retried with
@@ -43,10 +54,13 @@ raises mid-job (no leaked process pools).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.distributed.ctx import process_index as _process_index
 
 from repro.core.itemsets import (
     Itemset,
@@ -527,6 +541,12 @@ class SimRunner(BaseRunner):
         return results
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
+        if _as_reader(transactions) is not None:
+            raise TypeError(
+                "out-of-core chunked ingestion needs an engine-backed "
+                "runner (jax or sharded); SimRunner models the Hadoop "
+                "cluster over in-memory input splits"
+            )
         self._raw = transactions
         self._n_raw = max((max(t) for t in transactions if len(t)), default=-1) + 1
         self._chunks_raw = None  # stale until the next place(item_map)
@@ -608,6 +628,52 @@ class SimRunner(BaseRunner):
         return counts, prof
 
 
+def _as_reader(transactions):
+    """The ingested object, as a ChunkedDatasetReader if it is one (lazy
+    import: core must stay importable without the data package)."""
+    from repro.data.chunked import ChunkedDatasetReader
+
+    if isinstance(transactions, ChunkedDatasetReader):
+        return transactions
+    return None
+
+
+class _ChunkedPending:
+    """Out-of-core job handle: one engine FIFO handle per streamed chunk.
+
+    ``result()`` sums the per-chunk count vectors — int64 support counts are
+    additive over disjoint transaction blocks, so the total is bit-identical
+    to counting the whole resident DB (the chunked-parity suites pin it).
+    """
+
+    def __init__(self, runner: "JaxRunner", job: CountJob, parts,
+                 encode_s: float) -> None:
+        self._runner = runner
+        self._job = job
+        self._parts = parts
+        self._encode_s = encode_s
+
+    def poll(self) -> bool:
+        self._runner.engine.drain_ready()
+        return all(p.done for p in self._parts)
+
+    def result(self) -> Tuple[np.ndarray, JobProfile]:
+        t0 = time.perf_counter()
+        total = np.zeros((int(self._job.cand.shape[0]),), np.int64)
+        for p in self._parts:
+            total += p.result()
+        wait_s = time.perf_counter() - t0
+        prof = JobProfile(
+            k=self._job.k, n_candidates=self._job.n_candidates,
+            seconds=self._encode_s + wait_s,
+            encode_seconds=self._encode_s, count_seconds=wait_s,
+            inflight_depth=self._runner.engine.inflight,
+            inflight_retunes=self._runner.engine.inflight_retunes,
+            chunks=len(self._parts),
+        )
+        return total, prof
+
+
 class _JaxPending:
     """Async-job handle: blocks on the engine FIFO, then fills the profile."""
 
@@ -667,6 +733,10 @@ class JaxRunner(BaseRunner):
         self._padded_raw: Optional[np.ndarray] = None
         self._n_raw = 0
         self._raw_digest: Optional[str] = None
+        # Out-of-core mode: a ChunkedDatasetReader instead of a resident
+        # padded matrix; jobs stream chunks through the block-count path.
+        self._reader = None
+        self._chunk_item_map: Optional[np.ndarray] = None
 
     def describe(self) -> str:
         base = f"{self.kind}/{self.engine.store_name}"
@@ -687,13 +757,37 @@ class JaxRunner(BaseRunner):
         self.engine.abandon()
 
     def ingest(self, transactions: Sequence[Sequence[int]]) -> None:
+        reader = _as_reader(transactions)
+        if reader is not None:
+            # Out-of-core mode: nothing is materialized — the reader streams
+            # chunks through every job, peak host memory stays one chunk.
+            self._reader = reader
+            self._padded_raw = None
+            self._n_raw = reader.n_raw_items
+            self._raw_digest = None
+            self._chunk_item_map = None
+            return
         # The single host pass over the raw lists; everything downstream
         # (Job1, dense re-encode, counting) is vectorized or on device.
+        self._reader = None
         self._padded_raw, self._n_raw = padded_from_transactions(transactions)
         self._raw_digest = None  # lazily computed on first place()
 
     def job1(self) -> Tuple[np.ndarray, JobProfile]:
         t0 = time.perf_counter()
+        if self._reader is not None:
+            # Per-chunk device histograms, summed on host: bincount is
+            # additive over disjoint blocks, so this equals the whole-DB job.
+            hist = np.zeros((self._n_raw,), np.int64)
+            n_chunks = 0
+            for chunk in self._reader.chunks():
+                hist += self.engine.count_items_device(chunk, self._n_raw)
+                n_chunks += 1
+            wall = time.perf_counter() - t0
+            prof = JobProfile(k=1, n_candidates=int(np.count_nonzero(hist)),
+                              seconds=wall, count_seconds=wall,
+                              chunks=n_chunks)
+            return hist, prof
         hist = self.engine.count_items_device(self._padded_raw, self._n_raw)
         wall = time.perf_counter() - t0
         # n_candidates = distinct items actually observed — the same Job1
@@ -710,6 +804,13 @@ class JaxRunner(BaseRunner):
         miners — skips the host-side encode entirely."""
         from repro.core.runtime.cache import DATASET_CACHE, dataset_digest
 
+        if self._reader is not None:
+            # No resident DB in out-of-core mode (that is the point): jobs
+            # re-encode each chunk at count time via encode_block, so only
+            # the item map is kept.  The encoded-dataset cache is skipped —
+            # a cached EncodedDB *is* the whole-DB materialization.
+            self._chunk_item_map = np.asarray(item_map, np.int64)
+            return
         if self._raw_digest is None:
             self._raw_digest = dataset_digest(self._padded_raw)
         item_arr = np.asarray(item_map, np.int64)
@@ -756,11 +857,25 @@ class JaxRunner(BaseRunner):
         """The fused device-resident level loop (``runtime/device_loop.py``):
         gen -> encode -> count -> prune compiled into one dispatch per level,
         with optional on-device transaction trimming between levels."""
+        if self._reader is not None:
+            raise ValueError(
+                "device_loop=True needs the DB resident on device; "
+                "out-of-core chunked ingestion streams it instead — mine "
+                "with device_loop=False (the host SPC loop)"
+            )
         return self.engine.level_ladder(min_count, trim=trim,
                                         fault_plan=self.fault_plan)
 
-    def count_async(self, job: CountJob) -> _JaxPending:
+    def count_async(self, job: CountJob):
         if self.fault_plan is not None:
+            pspec = self.fault_plan.process_exit(
+                k=job.k, process=_process_index())
+            if pspec is not None:
+                # The genuine multi-host failure: this worker dies with no
+                # cleanup, exactly like a killed host.  Survivors discover it
+                # through the cluster supervisor (launch.multihost), which
+                # kills their hung collectives and relaunches from checkpoint.
+                os._exit(137)
             spec = self.fault_plan.device_loss(k=job.k)
             if spec is not None:
                 # Simulated device loss at job dispatch: outstanding work is
@@ -768,9 +883,26 @@ class JaxRunner(BaseRunner):
                 # driver's elastic-restart loop owns recovery.
                 self.engine.abandon()
                 raise DeviceLostError(lost=spec.lost, k=job.k)
+        if self._reader is not None:
+            return self._count_chunked_async(job)
         t0 = time.perf_counter()
         pending = self.engine.count_candidates_async(job.cand)
         return _JaxPending(self, job, pending, time.perf_counter() - t0)
+
+    def _count_chunked_async(self, job: CountJob) -> _ChunkedPending:
+        """Stream the reader through the wave: per chunk, the serving path's
+        encode (``encode_block``) + double-buffered block count; the handle
+        sums the per-chunk vectors.  Peak memory stays bounded by chunk size
+        times the FIFO depth — the engine forces the oldest result to host
+        once ``inflight`` chunk counts are outstanding, so dispatch never
+        runs ahead of the device by more than the queue."""
+        assert self._chunk_item_map is not None, "call place(item_map) first"
+        t0 = time.perf_counter()
+        parts = []
+        for chunk in self._reader.chunks():
+            enc = self.encode_block(chunk, self._chunk_item_map)
+            parts.append(self.engine.count_block_async(enc, job.cand))
+        return _ChunkedPending(self, job, parts, time.perf_counter() - t0)
 
 
 class ShardedRunner(JaxRunner):

@@ -1,3 +1,11 @@
+from repro.distributed.ctx import (
+    MultihostSpec,
+    fetch_global,
+    initialize_multihost,
+    multihost_env,
+    process_count,
+    process_index,
+)
 from repro.distributed.sharding import (
     ShardingRules,
     default_rules,
@@ -5,4 +13,15 @@ from repro.distributed.sharding import (
     act_pspec,
 )
 
-__all__ = ["ShardingRules", "default_rules", "batch_pspec", "act_pspec"]
+__all__ = [
+    "MultihostSpec",
+    "fetch_global",
+    "initialize_multihost",
+    "multihost_env",
+    "process_count",
+    "process_index",
+    "ShardingRules",
+    "default_rules",
+    "batch_pspec",
+    "act_pspec",
+]

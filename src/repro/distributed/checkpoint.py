@@ -26,9 +26,12 @@ post-commit points, so torn writes, kill-9-mid-save, and silent bit rot are
 all reproducible test scenarios (see ``faults.torn_write`` / ``kill_write``
 / ``kill_commit`` / ``bitrot``).
 
-On a real multi-host cluster each host would write only the shards it owns
-(jax.experimental array serialization); single-process here, the global-value
-format keeps restore elastic, which is the property under test.
+On a multi-host cluster every value checkpointed here is global/replicated,
+so process 0 alone writes the snapshot (concurrent same-step writers would
+race the atomic renames) and *every* process restores from it; a sharded-
+state system would instead write per-host shards (jax.experimental array
+serialization).  The global-value format is what keeps restore elastic
+across any process/device count, which is the property under test.
 """
 
 from __future__ import annotations
@@ -93,7 +96,17 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
          keep: int = 3, fault_plan=None) -> str:
     """Atomic, digest-stamped global-value snapshot. Returns the final
     directory. ``fault_plan`` optionally injects torn/killed/bit-rotted
-    writes at the protocol's failure points (test harness)."""
+    writes at the protocol's failure points (test harness).
+
+    Multi-host discipline: only process 0 writes (every process *restores*)
+    — concurrent same-step writers would race the atomic renames.  The
+    values are replicated/global on every process, so skipping the write is
+    lossless."""
+    try:
+        if jax.process_index() != 0:
+            return os.path.join(ckpt_dir, _snap_name(step))
+    except Exception:
+        pass  # jax uninitialized: single-process semantics
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, _snap_name(step))
     tmp = final + ".tmp"

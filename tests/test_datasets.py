@@ -241,3 +241,166 @@ def test_run_parity_cell_detects_divergence():
             "sim": lambda: SimRunner(structure="trie", n_mappers=2),
             "liar": lambda: LyingRunner(structure="trie", n_mappers=2),
         }, max_k=3)
+
+
+# -- out-of-core chunked reader ----------------------------------------------
+
+from repro.core import FrequentItemsetMiner  # noqa: E402
+from repro.core.stores import ARRAY_STORES, padded_from_transactions  # noqa: E402
+from repro.data import ChunkedDatasetReader  # noqa: E402
+
+
+def _chunk_db(seed=11, n=120, n_items=30):
+    """A small DB with an empty basket (the reader must preserve N)."""
+    db = get_dataset(f"T6I3D{n}", seed=seed, scale=1.0)
+    db = [sorted({i % n_items for i in t}) for t in db]
+    db[len(db) // 2] = []
+    return db
+
+
+def _write_db(tmp_path, db, gz):
+    path = str(tmp_path / ("db.dat.gz" if gz else "db.dat"))
+    write_dat(path, db)
+    return path
+
+
+@pytest.mark.parametrize("gz", [False, True])
+@pytest.mark.parametrize("chunk", [1, 7, None, "past_end"])
+def test_chunked_concat_parity(tmp_path, gz, chunk):
+    """Concatenating every chunk reproduces the whole-file padded matrix
+    bit for bit — at chunk size 1, a prime, exactly N, and past N."""
+    db = _chunk_db()
+    path = _write_db(tmp_path, db, gz)
+    size = {None: len(db), "past_end": len(db) + 100}.get(chunk, chunk)
+    r = ChunkedDatasetReader(path, chunk_transactions=size)
+    whole, n_raw = padded_from_transactions(read_dat(path))
+    assert len(r) == len(db)
+    assert r.n_raw_items == n_raw
+    parts = list(r.chunks())
+    assert len(parts) == r.n_chunks == -(-len(db) // size)
+    assert all(p.shape[1] == r.width for p in parts)
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), whole)
+
+
+def test_chunked_scan_sidecar_cache(tmp_path):
+    db = _chunk_db()
+    path = _write_db(tmp_path, db, gz=False)
+    r1 = ChunkedDatasetReader(path, chunk_transactions=16)
+    assert not r1.scanned_from_cache
+    side = path + ".chunkmeta.json"
+    assert os.path.exists(side)
+    r2 = ChunkedDatasetReader(path, chunk_transactions=16)
+    assert r2.scanned_from_cache
+    assert (len(r2), r2.width, r2.n_raw_items) == (len(r1), r1.width,
+                                                   r1.n_raw_items)
+    # Rewriting the source invalidates the sidecar (size/mtime key).
+    write_dat(path, [[1, 2], [3]])
+    os.utime(path, ns=(1, 1))
+    r3 = ChunkedDatasetReader(path)
+    assert not r3.scanned_from_cache
+    assert len(r3) == 2 and r3.n_raw_items == 4
+    # cache=False never writes a sidecar.
+    path2 = _write_db(tmp_path, db, gz=True)
+    ChunkedDatasetReader(path2, cache=False)
+    assert not os.path.exists(path2 + ".chunkmeta.json")
+
+
+def test_chunked_memory_budget_bounds_chunk(tmp_path):
+    db = _chunk_db()
+    path = _write_db(tmp_path, db, gz=False)
+    probe = ChunkedDatasetReader(path)
+    # A budget of a quarter of the padded matrix forces >= 4 chunks.
+    budget = (len(db) * probe.width * 4) // 4
+    r = ChunkedDatasetReader(path, memory_budget_bytes=budget)
+    assert r.chunk_transactions == budget // (r.width * 4)
+    assert r.n_chunks >= 4
+    for p in r.chunks():
+        assert p.nbytes <= budget
+    with pytest.raises(ValueError, match="not both"):
+        ChunkedDatasetReader(path, chunk_transactions=8,
+                             memory_budget_bytes=1024)
+    with pytest.raises(ValueError, match=">= 1"):
+        ChunkedDatasetReader(path, chunk_transactions=0)
+
+
+MIN_WIDTH_EXPECTED = 8  # padded_from_transactions(min_len=8) lane minimum
+
+
+def test_chunked_empty_file(tmp_path):
+    path = str(tmp_path / "empty.dat")
+    write_dat(path, [])
+    r = ChunkedDatasetReader(path)
+    assert len(r) == 0 and r.n_chunks == 0
+    assert list(r.chunks()) == []
+    assert r.width == MIN_WIDTH_EXPECTED
+
+
+@pytest.mark.parametrize("store", list(ARRAY_STORES))
+@pytest.mark.parametrize("backend", ["jax", "sharded"])
+def test_chunked_mine_matches_in_memory(tmp_path, store, backend):
+    """Streaming the DB in >= 4 chunks mines bit-identical itemsets AND
+    supports to the fully-resident path, on every store and both engine
+    backends — the tentpole's additivity claim, end to end."""
+    from repro.core.runtime import ShardedRunner
+    from repro.launch.mesh import compat_make_mesh
+
+    db = _chunk_db()
+    path = _write_db(tmp_path, db, gz=False)
+    reader = ChunkedDatasetReader(path, chunk_transactions=len(db) // 5)
+    assert reader.n_chunks >= 4
+
+    def miner():
+        if backend == "sharded":
+            runner = ShardedRunner(store=store,
+                                   mesh=compat_make_mesh((1,), ("data",)))
+            return FrequentItemsetMiner(min_support=0.05, runner=runner,
+                                        max_k=4)
+        return FrequentItemsetMiner(min_support=0.05, store=store, max_k=4)
+
+    res_mem = miner().mine(db)
+    res_chunked = miner().mine(reader)
+    assert res_chunked.itemsets == res_mem.itemsets
+    assert res_chunked.n_transactions == res_mem.n_transactions == len(db)
+    assert res_chunked.min_count == res_mem.min_count
+    assert all(p.chunks == reader.n_chunks for p in res_chunked.levels)
+    assert all(p.chunks == 0 for p in res_mem.levels)
+
+
+def test_chunked_mine_matches_device_loop_reference(tmp_path):
+    """The chunked stream agrees with the fused device ladder too (the
+    ladder needs a resident DB, so it is the in-memory reference here)."""
+    db = _chunk_db()
+    path = _write_db(tmp_path, db, gz=False)
+    reader = ChunkedDatasetReader(path, chunk_transactions=len(db) // 4)
+    ladder = FrequentItemsetMiner(min_support=0.05, store="perfect_hash",
+                                  max_k=4, device_loop=True).mine(db)
+    chunked = FrequentItemsetMiner(min_support=0.05, store="perfect_hash",
+                                   max_k=4).mine(reader)
+    assert chunked.itemsets == ladder.itemsets
+
+
+def test_chunked_device_loop_rejected(tmp_path):
+    db = _chunk_db()
+    reader = ChunkedDatasetReader(_write_db(tmp_path, db, gz=False),
+                                  chunk_transactions=32)
+    miner = FrequentItemsetMiner(min_support=0.05, store="perfect_hash",
+                                 device_loop=True)
+    with pytest.raises(ValueError, match="device_loop=False"):
+        miner.mine(reader)
+
+
+def test_chunked_sim_runner_rejected(tmp_path):
+    from repro.core.runtime import SimRunner
+
+    db = _chunk_db()
+    reader = ChunkedDatasetReader(_write_db(tmp_path, db, gz=False))
+    with pytest.raises(TypeError, match="engine-backed"):
+        SimRunner(structure="hash_tree").ingest(reader)
+
+
+def test_chunked_reader_describe(tmp_path):
+    db = _chunk_db()
+    reader = ChunkedDatasetReader(_write_db(tmp_path, db, gz=False),
+                                  chunk_transactions=30)
+    d = reader.describe()
+    assert "chunks" in d and str(len(db)) in d and "30" in d
